@@ -1,0 +1,27 @@
+"""Shared helpers for the paper-figure benchmarks."""
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.reference import rounds_to, run_alg1  # noqa: F401,E402
+
+OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def save_result(name: str, payload: dict) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    p = OUT_DIR / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=1, default=float))
+    return p
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

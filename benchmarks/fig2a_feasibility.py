@@ -1,0 +1,41 @@
+"""Paper Fig 2(a): Beck-Teboulle synthetic feasibility, T_i = 10.
+
+The separation condition fails (the two optimal sets meet tangentially at
+the origin), so only the general-convex guarantee applies: ||grad f(x_n)||^2
+vanishes at ~ C/n. We fit the tail slope on log-log axes and report it —
+the paper's reference line has slope -1."""
+from benchmarks.common import run_alg1, save_result
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.convex import beck_teboulle_losses
+
+
+def main(rounds: int = 2000) -> dict:
+    losses = beck_teboulle_losses()
+    out = run_alg1(losses, jnp.array([1.5, 0.8]), lr=0.4, T=10,
+                   rounds=rounds)
+    gsq = np.asarray(out["gsq"])
+    n = np.arange(1, rounds + 1)
+    tail = slice(rounds // 10, None)
+    slope = float(np.polyfit(np.log(n[tail]), np.log(gsq[tail]), 1)[0])
+    res = {
+        "figure": "2a",
+        "rounds": rounds,
+        "gsq_first": gsq[0], "gsq_last": gsq[-1],
+        "loglog_slope": slope,
+        "paper_reference_slope": -1.0,
+        "final_x": [float(v) for v in out["w"]],
+        "gsq_curve_sample": gsq[:: max(rounds // 100, 1)].tolist(),
+        # Theorem 2 guarantees residuals vanish AT LEAST as fast as ~1/n
+        # (the paper's reference line); our lr/T give a faster power law —
+        # consistent with the bound being an upper bound.
+        "pass": bool(slope < -0.5 and gsq[-1] < 1e-6),
+    }
+    save_result("fig2a_feasibility", res)
+    return res
+
+
+if __name__ == "__main__":
+    print(main())

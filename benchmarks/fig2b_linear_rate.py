@@ -1,0 +1,58 @@
+"""Paper Fig 2(b): mean-square regression on a colon-cancer-shaped
+over-parameterized problem (n=62 samples, d=2000 features, m=2 nodes),
+T_i in {1, 10, 100, inf}. All choices give LINEAR convergence and larger
+T_i needs fewer communication rounds. T=inf is simulated by local GD until
+||grad_i||^2 <= 1e-8 (the paper's threshold)."""
+from benchmarks.common import rounds_to, run_alg1, save_result
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.convex import make_overparam_regression
+
+
+def main(rounds: int = 150, tol: float = 1e-7) -> dict:
+    # tol sits ABOVE the T=inf local threshold (1e-8): once every node
+    # solves to ||g_i||^2 <= 1e-8, the averaged global residual plateaus
+    # near that threshold and cannot reach far below it.
+    prob = make_overparam_regression(n=62, d=2000, m=2, seed=0)
+    losses = prob.local_losses()
+    w0 = jnp.zeros(2000)
+    res = {"figure": "2b", "tol": tol, "curves": {}, "rounds_to_tol": {},
+           "linear_rate_r2": {}}
+    for label, T, thr in [("T=1", 1, None), ("T=10", 10, None),
+                          ("T=100", 100, None), ("T=inf", None, 1e-8)]:
+        out = run_alg1(losses, w0, lr=2.0, T=T, rounds=rounds,
+                       threshold=thr, stop_below=tol * 1e-6)
+        gsq = np.asarray(out["gsq"])
+        res["curves"][label] = gsq.tolist()
+        res["rounds_to_tol"][label] = rounds_to(gsq, tol)
+        # linear convergence = straight line in semilog; fit the pre-
+        # plateau segment (T=inf plateaus at its local threshold)
+        above = np.nonzero(gsq <= tol)[0]
+        k = int(above[0]) + 1 if above.size else len(gsq)
+        k = max(k, 3)
+        y = np.log(gsq[:k])
+        x = np.arange(k)
+        c = np.polyfit(x, y, 1)
+        r2 = 1 - np.sum((y - np.polyval(c, x)) ** 2) / max(
+            np.sum((y - y.mean()) ** 2), 1e-30)
+        res["linear_rate_r2"][label] = float(r2)
+    rt = res["rounds_to_tol"]
+    # T=inf stops each local solve at ||g_i||^2 <= 1e-8, so its per-round
+    # progress saturates at the threshold — the paper's Fig 2(b) likewise
+    # shows the threshold curve coinciding with (not beating) T=100.
+    res["monotone_in_T"] = bool(
+        (rt["T=100"] or rounds) <= (rt["T=10"] or rounds)
+        <= (rt["T=1"] or rounds)
+        and (rt["T=inf"] or rounds) <= (rt["T=100"] or rounds) + 2)
+    res["pass"] = bool(res["monotone_in_T"]
+                       and all(v and v > 0.9 for v in
+                               res["linear_rate_r2"].values()))
+    save_result("fig2b_linear_rate", res)
+    return res
+
+
+if __name__ == "__main__":
+    r = main()
+    print({k: r[k] for k in ("rounds_to_tol", "linear_rate_r2", "pass")})

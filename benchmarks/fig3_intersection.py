@@ -1,0 +1,82 @@
+"""Paper Fig 3 / Sec 3.2.1: necessity of the intersection assumption.
+
+Two 1-layer nets on a 500-sample MNIST-shaped classification set:
+  * Intersected:    affine 784 -> 10 (7850 params > 500 samples)
+  * Non-intersected: two 2x2 max-pools -> affine 49 -> 10 (500 params)
+Distributed (m=10 nodes, T=100) vs centralized (1 node). With the
+intersection assumption the 10-node run matches centralized; without it
+the distributed gradient residual stalls well above centralized."""
+from benchmarks.common import run_alg1, save_result
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import gaussian_classification, maxpool2x2_twice
+
+
+def make_losses(x, labels, m):
+    """Split (x, labels) over m nodes; softmax-CE affine model on flat w."""
+    n, d = x.shape
+    k = 10
+    idx = np.array_split(np.arange(n), m)
+
+    def node_loss(xi, yi):
+        xi = jnp.asarray(xi)
+        yi = jnp.asarray(yi)
+
+        def f(w):
+            W = w[: d * k].reshape(d, k)
+            b = w[d * k:]
+            logits = xi @ W + b
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yi[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        return f
+
+    return [node_loss(x[i], labels[i]) for i in idx], d * k + k
+
+
+def main(rounds: int = 40) -> dict:
+    x, labels = gaussian_classification(n=500, side=28, seed=0)
+    x = x / np.abs(x).max()
+    cases = {
+        "intersected": x,                         # 7850 params > 500
+        "non_intersected": maxpool2x2_twice(x),   # 500 params
+    }
+    res = {"figure": "3", "rounds": rounds, "cases": {}}
+    for name, xc in cases.items():
+        losses_m, dim = make_losses(xc, labels, m=10)
+        losses_1, _ = make_losses(xc, labels, m=1)
+        w0 = jnp.zeros(dim)
+        lr = 0.5
+        out_m = run_alg1(losses_m, w0, lr=lr, T=100, rounds=rounds)
+        out_1 = run_alg1(losses_1, w0, lr=lr, T=100, rounds=rounds)
+        res["cases"][name] = {
+            "params": dim, "samples": 500,
+            "gsq_10node": out_m["gsq"][-1], "gsq_1node": out_1["gsq"][-1],
+            "f_10node": out_m["f"][-1], "f_1node": out_1["f"][-1],
+            "gsq_curve_10node": out_m["gsq"][::4],
+            "f_gap_vs_centralized": out_m["f"][-1] - out_1["f"][-1],
+        }
+    inter = res["cases"]["intersected"]
+    noninter = res["cases"]["non_intersected"]
+    # paper Fig 3(b)/(d): with the intersection assumption the 10-node
+    # loss matches centralized; without it a persistent gap remains
+    # (CE on non-separable pooled features also keeps grad residuals from
+    # vanishing at the same rate as centralized — Fig 3(a)).
+    res["pass"] = bool(
+        inter["f_gap_vs_centralized"] < 1e-3
+        and noninter["f_gap_vs_centralized"]
+        > 100 * max(inter["f_gap_vs_centralized"], 1e-6)
+        and inter["gsq_10node"] < 1e-4)
+    save_result("fig3_intersection", res)
+    return res
+
+
+if __name__ == "__main__":
+    r = main()
+    print({k: (v if k != "cases" else {c: cc["f_gap_vs_centralized"]
+                                       for c, cc in v.items()})
+           for k, v in r.items()})

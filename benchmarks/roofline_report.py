@@ -1,0 +1,33 @@
+"""Roofline summary benchmark: re-derives the three terms for every
+(arch x shape) from the cached dry-run records and reports aggregate
+statistics (deliverable g; full table in EXPERIMENTS.md)."""
+from benchmarks.common import save_result
+
+from repro.launch.roofline import load_records, roofline_row
+
+
+def main() -> dict:
+    rows = [r for r in (roofline_row(rec) for rec in load_records())
+            if r]
+    assert rows, "run `python -m repro.launch.dryrun --all` first"
+    dominant = {}
+    for r in rows:
+        dominant[r["dominant"]] = dominant.get(r["dominant"], 0) + 1
+    worst = min(rows, key=lambda r: r["useful_frac"])
+    res = {
+        "name": "roofline-summary",
+        "pairs": len(rows),
+        "dominant_counts": dominant,
+        "not_fitting_hbm": [f"{r['arch']}x{r['shape']}" for r in rows
+                            if not r["fits_hbm"]],
+        "worst_useful_frac": {
+            "pair": f"{worst['arch']}x{worst['shape']}",
+            "useful_frac": worst["useful_frac"]},
+        "pass": len(rows) == 40,
+    }
+    save_result("roofline_summary", res)
+    return res
+
+
+if __name__ == "__main__":
+    print(main())

@@ -1,0 +1,48 @@
+"""The paper's convex experiments end-to-end (Sec 2.3):
+
+1. Beck-Teboulle feasibility — separation fails, O(1/n) residuals.
+2. Over-parameterized regression — linear rate for T = 1..inf; larger T
+   means fewer communication rounds.
+
+    PYTHONPATH=src python examples/convex_feasibility.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reference import rounds_to, run_alg1
+from repro.data.convex import (beck_teboulle_losses,
+                               make_overparam_regression)
+
+
+def main():
+    print("== 1. synthetic feasibility (no separation -> ~1/n) ==")
+    out = run_alg1(beck_teboulle_losses(), jnp.array([1.5, 0.8]),
+                   lr=0.4, T=10, rounds=800)
+    gsq = np.asarray(out["gsq"])
+    n = np.arange(1, len(gsq) + 1)
+    slope = np.polyfit(np.log(n[80:]), np.log(gsq[80:]), 1)[0]
+    print(f"  final x = {np.asarray(out['w']).round(4)}  (optimum: [0 0])")
+    print(f"  ||grad||^2: {gsq[0]:.2e} -> {gsq[-1]:.2e}; "
+          f"log-log slope {slope:.2f} (paper reference: -1)")
+
+    print("== 2. over-parameterized regression (linear rate, any T) ==")
+    prob = make_overparam_regression(n=62, d=2000, m=2)
+    losses = prob.local_losses()
+    w0 = jnp.zeros(2000)
+    for label, T, thr in [("T=1", 1, None), ("T=10", 10, None),
+                          ("T=100", 100, None), ("T=inf", None, 1e-8)]:
+        out = run_alg1(losses, w0, lr=2.0, T=T, rounds=150, threshold=thr,
+                       stop_below=1e-13)
+        r = rounds_to(out["gsq"], 1e-7)
+        print(f"  {label:6s} rounds to ||grad||^2<=1e-7: {r}"
+              f"   (final {out['gsq'][-1]:.1e})")
+    print("  -> more local work, fewer communication rounds (paper Fig 2b)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's algorithm in ~40 lines against the public API.
+
+Builds a reduced qwen3-32b, runs 5 local-SGD communication rounds
+(m=4 nodes, T=8 local steps) and shows the loss dropping while only 5
+model averages (vs 40 gradient all-reduces for sync-DP) are communicated.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs.base import get_config
+from repro.core import localsgd as lsgd
+from repro.data.synthetic import fixed_group_batches
+from repro.models import build_model
+
+
+def main():
+    cfg = get_config("qwen3-32b").reduced()       # 2L, d=256 smoke variant
+    model = build_model(cfg, schedule="rect")
+    params = model.init(jax.random.PRNGKey(0))
+
+    G, T = 4, 8                                    # m nodes, local steps
+    opt = optim.sgd(0.05)
+    round_ = jax.jit(lsgd.make_local_round(
+        model.loss, opt, lsgd.LocalSGDConfig(n_groups=G, inner_steps=T)))
+
+    state = lsgd.init_state(params, opt, n_groups=G)
+    batch = {"tokens": jnp.asarray(
+        fixed_group_batches(cfg.vocab_size, seq_len=64, n_groups=G,
+                            per_group=2)["tokens"])}
+
+    print(f"arch={cfg.name}  m={G} nodes  T={T} local steps/round")
+    for n in range(5):
+        state, m = round_(state, batch)
+        print(f"round {n}: mean local loss {float(jnp.mean(m['loss'])):.4f}"
+              f"  grad_sq {float(jnp.mean(m['grad_sq'])):.3e}"
+              f"  (1 model average <-> {G * T} local GD steps)")
+    print("communicated 5 averages; sync-DP would have all-reduced "
+          f"{5 * T} gradients")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched-serving example: greedy-decode 4 concurrent requests on a
+reduced hybrid (Mamba2 + shared-attention) model — exercising the O(1)
+recurrent-state cache path used by the long_500k dry-run shape.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def main():
+    for arch in ("zamba2-7b", "qwen3-32b"):
+        print(f"=== {arch} (reduced) ===")
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--reduced", "--batch", "4", "--prompt-len", "12",
+             "--gen", "12"],
+            cwd=str(ROOT), check=True,
+            env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Pytree checkpointing: npz tensors + json metadata (paths keep the tree
+structure via '/'-joined keys)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+# npz only understands native numpy dtypes; ml_dtypes (bfloat16, fp8)
+# round-trip through a bit-compatible integer view + a dtype sidecar key.
+_NATIVE = set("?bhilqBHILQefdgFD")
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.char not in _NATIVE:
+            flat[key + "::dtype"] = np.array(str(arr.dtype))
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path + ".npz", **_flatten(tree))
+    with open(path + ".json", "w") as f:
+        json.dump(metadata or {}, f, indent=2, default=str)
+
+
+def load(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (a matching pytree)."""
+    import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+
+    data = np.load(path + ".npz")
+    flat = dict(data)
+    keys = []
+    for p, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+        keys.append("/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                             for q in p))
+    leaves = []
+    for k in keys:
+        arr = flat[k]
+        if k + "::dtype" in flat:
+            arr = arr.view(np.dtype(str(flat[k + "::dtype"])))
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path + ".json") as f:
+        return json.load(f)

@@ -1,0 +1,48 @@
+"""Adaptive-T controller (paper Sec 4, 'detect the order of local convergence
+on the fly, then use these estimates as a guideline to adjust T')."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import theory
+
+
+@dataclasses.dataclass
+class AdaptiveT:
+    """Adjusts the number of local steps between communication rounds.
+
+    r: cost ratio C_g / C_c (local step cost / communication cost). On the
+    production mesh this is instantiated from the dry-run roofline terms
+    (see launch/roofline.py: r = step_time_est / allreduce_time_est).
+    """
+
+    r: float
+    t_min: int = 1
+    t_max: int = 10_000
+    ema: float = 0.5                    # smoothing of T across rounds
+    _t: float = 10.0
+    history: Optional[List] = None
+
+    def __post_init__(self):
+        self.history = []
+
+    @property
+    def t(self) -> int:
+        return int(np.clip(round(self._t), self.t_min, self.t_max))
+
+    def update(self, grad_sq_traj) -> int:
+        """Feed the last round's per-step local ||grad||^2 trajectory.
+        Degenerate trajectories (diverged, constant, too short) leave T
+        unchanged."""
+        fit = theory.fit_decay(np.asarray(grad_sq_traj))
+        if fit is not None:
+            try:
+                t_star = theory.t_star_from_fit(fit, self.r)
+            except (ValueError, OverflowError):
+                return self.t
+            self._t = self.ema * self._t + (1.0 - self.ema) * t_star
+            self.history.append((fit, t_star, self.t))
+        return self.t

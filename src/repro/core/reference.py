@@ -1,0 +1,104 @@
+"""Reference host-side driver for Alg 1 on analytic (convex) problems.
+
+Used by the paper-validation benchmarks and tests. The T local GD steps
+run inside ONE jitted lax.scan / lax.while_loop per (node, round) — no
+per-step Python dispatch, which matters for the paper's T=100..inf runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_local_T(f: Callable, lr: float, T: int):
+    """w -> (w_T, gsq_traj (T,)) after T local GD steps."""
+    g = jax.grad(f)
+
+    @jax.jit
+    def run(w):
+        def step(w, _):
+            gi = g(w)
+            return w - lr * gi, jnp.sum(gi ** 2)
+
+        return jax.lax.scan(step, w, None, length=T)
+
+    return run
+
+
+def make_local_threshold(f: Callable, lr: float, eps: float,
+                         max_inner: int):
+    """w -> (w_out, steps) : local GD until ||grad||^2 <= eps (T_i=inf)."""
+    g = jax.grad(f)
+
+    @jax.jit
+    def run(w):
+        def cond(c):
+            w, n, gsq = c
+            return jnp.logical_and(n < max_inner, gsq > eps)
+
+        def body(c):
+            w, n, _ = c
+            gi = g(w)
+            w = w - lr * gi
+            gi2 = g(w)
+            return w, n + 1, jnp.sum(gi2 ** 2)
+
+        g0 = g(w)
+        w, n, _ = jax.lax.while_loop(
+            cond, body, (w, jnp.zeros((), jnp.int32), jnp.sum(g0 ** 2)))
+        return w, n
+
+    return run
+
+
+def run_alg1(losses: List[Callable], w0, lr: float, T: Optional[int],
+             rounds: int, threshold: Optional[float] = None,
+             max_inner: int = 100_000, record_local_traj: bool = False,
+             stop_below: Optional[float] = None) -> dict:
+    """Model averaging (paper Alg 1) on a list of local losses.
+
+    T=None + threshold=eps -> the paper's T_i = infinity mode.
+    Returns per-round global ||grad f||^2, f values, inner-step counts,
+    final iterate, and node 0's local gsq trajectory if requested."""
+    if threshold is not None:
+        runners = [make_local_threshold(f, lr, threshold, max_inner)
+                   for f in losses]
+    else:
+        runners = [make_local_T(f, lr, T) for f in losses]
+    grads = [jax.jit(jax.grad(f)) for f in losses]
+    fvals = [jax.jit(f) for f in losses]
+
+    w = jnp.asarray(w0)
+    gsq, fs, inner, local_traj = [], [], [], []
+    for _ in range(rounds):
+        locals_, counts = [], []
+        for i, run in enumerate(runners):
+            if threshold is not None:
+                wi, n = run(w)
+                counts.append(int(n))
+            else:
+                wi, traj = run(w)
+                counts.append(T)
+                if record_local_traj and i == 0:
+                    local_traj.extend(np.asarray(traj).tolist())
+            locals_.append(wi)
+        w = jnp.mean(jnp.stack(locals_), axis=0)
+        g_glob = jnp.mean(jnp.stack([g(w) for g in grads]), axis=0)
+        gsq.append(float(jnp.sum(g_glob ** 2)))
+        fs.append(float(np.mean([fv(w) for fv in fvals])))
+        inner.append(counts)
+        if stop_below is not None and gsq[-1] <= stop_below:
+            break
+    return {"gsq": gsq, "f": fs, "inner": inner, "w": w,
+            "local_traj": local_traj}
+
+
+def rounds_to(gsq_list, tol) -> Optional[int]:
+    for i, g in enumerate(gsq_list):
+        if g <= tol:
+            return i + 1
+    return None

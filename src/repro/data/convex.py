@@ -1,0 +1,130 @@
+"""The paper's convex / analytic experiment problems.
+
+* Beck–Teboulle synthetic feasibility (Sec 2.3.1): two losses on R^2 whose
+  optimal sets touch only at the origin — the separation condition fails,
+  so only the O(1/n) general-convex rate applies.
+* Over-parameterized least squares (Sec 2.3.2): n=62 samples, d=2000
+  features split over m nodes — every node interpolates, Assumptions 1-3
+  hold, linear rate. The colon-cancer dataset is offline-unavailable, so we
+  generate a synthetic matrix with the same (n, d) and conditioning style;
+  the geometry (over-parameterized interpolation) is what the theory needs.
+* Quartic loss variant (Sec 4 experiment): residual^4 — sub-linear local GD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Synthetic feasibility (Beck & Teboulle 2003 example, paper Fig 1-2a)
+# ---------------------------------------------------------------------------
+
+
+def beck_teboulle_losses() -> List[Callable]:
+    """f1 = max(sqrt(x^2+(y-1)^2) - 1, 0)^2  (disk of radius 1 around (0,1))
+    f2 = max(y, 0)^2                         (lower half plane y <= 0)
+    S1 ∩ S2 = {(0,0)}; the sets meet tangentially (no separation)."""
+
+    def f1(w):
+        x, y = w[0], w[1]
+        return jnp.maximum(jnp.sqrt(x ** 2 + (y - 1.0) ** 2 + 1e-30) - 1.0,
+                           0.0) ** 2
+
+    def f2(w):
+        return jnp.maximum(w[1], 0.0) ** 2
+
+    return [f1, f2]
+
+
+# ---------------------------------------------------------------------------
+# Over-parameterized regression (paper Fig 2b / Fig 5)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RegressionProblem:
+    xs: List[np.ndarray]   # per-node design matrices
+    ys: List[np.ndarray]   # per-node targets
+    power: int = 1         # loss = mean(residual^(2*power))
+
+    @property
+    def m(self) -> int:
+        return len(self.xs)
+
+    def local_losses(self) -> List[Callable]:
+        fns = []
+        for X, y in zip(self.xs, self.ys):
+            Xj, yj = jnp.asarray(X), jnp.asarray(y)
+            p = self.power
+
+            def f(w, Xj=Xj, yj=yj, p=p):
+                r = Xj @ w - yj
+                return jnp.mean(jnp.square(r) ** p)
+
+            fns.append(f)
+        return fns
+
+    def global_loss(self) -> Callable:
+        fns = self.local_losses()
+
+        def f(w):
+            return sum(fn(w) for fn in fns) / len(fns)
+
+        return f
+
+
+def make_overparam_regression(n: int = 62, d: int = 2000, m: int = 2,
+                              power: int = 1, seed: int = 0,
+                              scale: float = 1.0) -> RegressionProblem:
+    """Colon-cancer-shaped synthetic regression: n << d so each node's
+    normal equations are degenerate and interpolating solutions exist
+    (Assumption 1 holds: any w with X w = y on all nodes is common-optimal,
+    and such w exist since rank(X) <= n < d)."""
+    rng = np.random.RandomState(seed)
+    X = rng.randn(n, d).astype(np.float64) * scale / np.sqrt(d)
+    w_true = rng.randn(d)
+    y = X @ w_true  # realizable -> zero-loss intersection non-empty
+    idx = np.array_split(np.arange(n), m)
+    return RegressionProblem(
+        xs=[X[i] for i in idx], ys=[y[i] for i in idx], power=power)
+
+
+# ---------------------------------------------------------------------------
+# Random intersecting quadratics (for the hypothesis property tests)
+# ---------------------------------------------------------------------------
+
+
+def random_intersecting_quadratics(key, m: int, d: int, rank: int):
+    """m quadratics f_i(w) = ||A_i (w - w*)||^2 / 2 sharing minimizer set
+    containing w* (rank < d makes S_i affine subspaces through w*).
+    Returns (losses, w_star, As)."""
+    keys = jax.random.split(key, m + 1)
+    w_star = jax.random.normal(keys[0], (d,))
+    losses, mats = [], []
+    for i in range(m):
+        A = jax.random.normal(keys[i + 1], (rank, d)) / np.sqrt(d)
+        mats.append(A)
+
+        def f(w, A=A):
+            r = A @ (w - w_star)
+            return 0.5 * jnp.sum(r ** 2)
+
+        losses.append(f)
+    return losses, w_star, mats
+
+
+def distance_to_intersection(w, mats, w_star):
+    """d(w, S) where S = {w: A_i (w - w*) = 0 for all i}."""
+    A = jnp.concatenate(mats, axis=0)
+    # projection of (w - w*) onto row space of stacked A
+    u, s, vt = jnp.linalg.svd(A, full_matrices=False)
+    keep = s > 1e-8 * s.max()
+    V = vt[keep]
+    diff = w - w_star
+    proj = V.T @ (V @ diff)
+    return jnp.linalg.norm(proj)

@@ -1,0 +1,86 @@
+"""Pallas kernel for the Mamba2 SSD *intra-chunk* computation.
+
+Grid (B, H, c): each program handles one (batch, head, chunk) tile entirely
+in VMEM — cumulative decays, the masked (L,L) intra-chunk matmul chain and
+the per-chunk summarized state. The cheap inter-chunk linear recurrence
+stays in jnp (`lax.scan`) — it is O(S/L) tiny state updates, not a
+hot spot. MXU-aligned shapes: L=chunk (128), N=state (64), P=headdim (64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xh_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, st_ref, dec_ref,
+            cum_ref, *, L):
+    h = pl.program_id(1)
+    xh = xh_ref[0, :, 0].astype(jnp.float32)      # (L,P)
+    bm = b_ref[0].astype(jnp.float32)             # (L,N)
+    cm = c_ref[0].astype(jnp.float32)             # (L,N)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)      # (L,)
+    a = a_ref[0]                                  # scalar for this head
+
+    da = dt * a                                   # (L,)
+    cum = jnp.cumsum(da)                          # (L,)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    w = jnp.where(rows >= cols,
+                  jnp.exp(cum[:, None] - cum[None, :]) * dt[None, :], 0.0)
+    cb = cm @ bm.T                                # (L,L)
+    y = (cb * w) @ xh                             # (L,P)
+
+    last = cum[L - 1]
+    w_state = jnp.exp(last - cum) * dt            # (L,)
+    st = (bm * w_state[:, None]).T @ xh           # (N,P)
+
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0] = st
+    dec_ref[0, 0] = jnp.exp(last)
+    cum_ref[0, :, 0] = cum
+
+
+def mamba_chunk(xh, bmat, cmat, dt, a, *, interpret: bool = True):
+    """Intra-chunk SSD for all chunks.
+
+    xh (B,c,L,H,P), bmat (B,c,L,N), cmat (B,c,L,N), dt (B,c,L,H), a (H,).
+    Returns (y_intra (B,c,L,H,P), states (B,c,H,N,P), chunk_decay (B,c,H),
+             cum (B,c,L,H)).
+    """
+    B, c, L, H, P = xh.shape
+    N = bmat.shape[-1]
+    # layout with (b*c) leading, heads as a grid dim
+    xh_r = xh.reshape(B * c, L, H, P)
+    b_r = bmat.reshape(B * c, L, N)
+    c_r = cmat.reshape(B * c, L, N)
+    dt_r = dt.reshape(B * c, L, H)
+
+    y, st, dec, cum = pl.pallas_call(
+        functools.partial(_kernel, L=L),
+        grid=(B * c, H),
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, L, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, L, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1,), lambda b, h: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h: (b, h)),
+            pl.BlockSpec((1, L, 1), lambda b, h: (b, 0, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * c, L, H, P), xh.dtype),
+            jax.ShapeDtypeStruct((B * c, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((B * c, H), jnp.float32),
+            jax.ShapeDtypeStruct((B * c, L, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xh_r, b_r, c_r, dt_r, a)
+    return (y.reshape(B, c, L, H, P), st.reshape(B, c, H, N, P),
+            dec.reshape(B, c, H), cum.reshape(B, c, L, H))

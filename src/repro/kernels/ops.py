@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True unless running on a real TPU backend — the
+same call sites work on this CPU container (interpret mode validates the
+kernel bodies) and on the production mesh (compiled VMEM kernels).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_adamw as _ad
+from repro.kernels import mamba_scan as _ms
+from repro.kernels import rmsnorm as _rn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                               interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, w, eps: float = 1e-5, block_rows: int = 128):
+    return _rn.rmsnorm(x, w, eps=eps, block_rows=block_rows,
+                       interpret=not _on_tpu())
+
+
+@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "wd"))
+def fused_adamw(p, g, m, v, count, lr: float, b1: float = 0.9,
+                b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0):
+    return _ad.fused_adamw(p, g, m, v, count=count, lr=lr, b1=b1, b2=b2,
+                           eps=eps, wd=wd, interpret=not _on_tpu())
+
+
+@jax.jit
+def mamba_chunk(xh, bmat, cmat, dt, a):
+    return _ms.mamba_chunk(xh, bmat, cmat, dt, a, interpret=not _on_tpu())

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """q,k,v (B,H,S,hd) -> (B,H,S,hd). Plain softmax attention."""
+    S = q.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(q.shape[-1])
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), v)
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def adamw_ref(p, g, m, v, *, count, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    """One fused AdamW step on flat arrays; count is the post-increment step."""
+    c = jnp.asarray(count, jnp.float32)
+    bc1 = 1.0 - b1 ** c
+    bc2 = 1.0 - b2 ** c
+    g = g.astype(jnp.float32)
+    m_ = b1 * m + (1 - b1) * g
+    v_ = b2 * v + (1 - b2) * jnp.square(g)
+    upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+    new_p = p - lr * (upd + wd * p)
+    return new_p.astype(p.dtype), m_, v_
+
+
+def mamba_chunk_ref(xh, bmat, cmat, dt, a):
+    """Single-chunk SSD oracle.
+
+    xh (L,H,P), bmat (L,N), cmat (L,N), dt (L,H), a (H,) negative.
+    Returns (y_intra (L,H,P), state (H,N,P), chunk_decay (H,),
+             cum (L,H)) — matching the Pallas kernel outputs.
+    """
+    L = xh.shape[0]
+    da = dt * a                             # (L,H)
+    cum = jnp.cumsum(da, axis=0)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w_ij = jnp.where(mask[:, :, None],
+                     jnp.exp(cum[:, None, :] - cum[None, :, :]), 0.0)
+    w_ij = w_ij * dt[None, :, :]            # (i,j,H)
+    cb = cmat @ bmat.T                      # (L,L)
+    y = jnp.einsum("lm,lmh,mhp->lhp", cb, w_ij, xh)
+    last = cum[-1]                          # (H,)
+    w_state = jnp.exp(last[None] - cum) * dt    # (L,H)
+    state = jnp.einsum("ln,lh,lhp->hnp", bmat, w_state, xh)
+    return y, state, jnp.exp(last), cum

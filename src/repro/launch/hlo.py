@@ -1,0 +1,129 @@
+"""Parse collective-communication volume out of optimized HLO text.
+
+``cost_analysis()`` does not report collective bytes, so §Roofline's
+collective term is derived here: scan the compiled module for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops and sum their tensor sizes (result shape; for reduce-scatter the
+pre-scatter input = result x group size).
+
+Shapes are parsed from the HLO type syntax ``dtype[d0,d1,...]{layout}``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9a-z]*)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of every dtype[dims] occurrence in an HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [n_groups,group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+_IOTA_FULL_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+_EXPLICIT_RE = re.compile(r"replica_groups=\{(\{[0-9, ]+\}(?:,\{[0-9, ]+\})*)\}")
+
+
+def replica_group_members(line: str):
+    """Expand replica_groups (explicit or iota form) to lists of device
+    ids. Returns None if no groups are present."""
+    m = _IOTA_FULL_RE.search(line)
+    if m:
+        import numpy as np
+
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        return ids.reshape(g, s).tolist()
+    m = _EXPLICIT_RE.search(line)
+    if m:
+        return [[int(x) for x in grp.split(",")]
+                for grp in m.group(1).strip("{}").split("},{")]
+    return None
+
+
+def groups_cross_slow(line: str, slow_block: int) -> bool:
+    """True if any replica group spans devices in different slow-axis
+    blocks (block = 256 devices/pod on the multi-pod mesh; 16 devices per
+    data-row on the single-pod mesh). These collectives ride the slow
+    links — the traffic the paper's algorithm amortizes by T."""
+    groups = replica_group_members(line)
+    if not groups:
+        return False
+    for grp in groups:
+        blocks = {d // slow_block for d in grp}
+        if len(blocks) > 1:
+            return True
+    return False
+
+
+def parse_collectives(hlo_text: str) -> List[Dict]:
+    """One record per collective op: kind, tensor bytes, group size."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        nbytes = shape_bytes(result_type)
+        g = _group_size(line)
+        if kind.startswith("all-reduce") and "-start" in line:
+            # start op result is a tuple (operand, result): halve
+            nbytes //= 2
+        moved = nbytes
+        if kind == "reduce-scatter":
+            moved = nbytes * g  # result is 1/g of the reduced input
+        out.append({"kind": kind, "bytes": nbytes, "group": g,
+                    "moved": moved})
+    return out
+
+
+def collective_summary(hlo_text: str) -> Dict:
+    """Aggregate collective volume (per-device bytes, from SPMD module)."""
+    recs = parse_collectives(hlo_text)
+    by_kind: Dict[str, int] = {}
+    for r in recs:
+        by_kind[r["kind"]] = by_kind.get(r["kind"], 0) + r["moved"]
+    return {
+        "n_collectives": len(recs),
+        "bytes_by_kind": by_kind,
+        "total_bytes": sum(by_kind.values()),
+    }

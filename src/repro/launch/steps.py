@@ -1,0 +1,364 @@
+"""Step builders for the dry-run / launcher: per (arch, input-shape, mesh)
+produce a jit-able step function plus abstract inputs and shardings.
+
+Modes (from InputShape.kind):
+  train    local-SGD round (paper Alg 1: T local steps + averaging) or the
+           conventional sync-DP baseline
+  prefill  forward over the full sequence + last-position logits
+  decode   one token against a KV cache of cache_len (sliding window for
+           long_500k on attention archs — see DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import localsgd as lsgd
+from repro.models import build_model
+from repro.sharding import specs as sh
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                       # callable to jit
+    args: Tuple                   # abstract args (ShapeDtypeStructs)
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch inputs (ShapeDtypeStruct stand-ins + shardings)
+# ---------------------------------------------------------------------------
+
+
+def batch_abstract(cfg: ArchConfig, batch_dims: Tuple[int, ...],
+                   seq_len: int, mesh: Mesh, leading_group: bool,
+                   inner_axis: Optional[str] = None):
+    """Abstract model inputs with leading batch dims (e.g. (G, b) or (B,)).
+
+    inner_axis: mesh axis the per-group batch dim shards over — "fsdp"
+    under the fsdp policy, "model" under the dp policy (params
+    replicated, the model axis acts as extra data parallelism)."""
+    dp = sh.dp_axes(mesh)
+    lead = P(dp) if leading_group else sh.batch_spec(mesh, batch_dims[0],
+                                                     False)
+    pad: Tuple = (None,) * (len(batch_dims) - 1)
+    if (inner_axis and len(batch_dims) > 1
+            and inner_axis in mesh.axis_names
+            and batch_dims[1] % mesh.shape[inner_axis] == 0):
+        pad = (inner_axis,) + (None,) * (len(batch_dims) - 2)
+    toks = SDS(batch_dims + (seq_len,), jnp.int32)
+    spec_t = P(*(tuple(lead) + pad + (None,)))
+    batch = {"tokens": toks}
+    specs = {"tokens": spec_t}
+    if cfg.family == "vlm":
+        batch["patches"] = SDS(batch_dims + (cfg.n_patches, cfg.d_model),
+                               jnp.float32)
+        specs["patches"] = P(*(tuple(lead) + pad + (None, None)))
+    if cfg.family == "audio":
+        batch["frames"] = SDS(batch_dims + (cfg.n_frames, cfg.d_model),
+                              jnp.float32)
+        specs["frames"] = P(*(tuple(lead) + pad + (None, None)))
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings (decode)
+# ---------------------------------------------------------------------------
+
+
+def cache_specs(cfg: ArchConfig, cache_abs, mesh: Mesh, batch: int):
+    """Name/rank-based PartitionSpecs for decode caches (see DESIGN.md):
+    batch over ("pod","data") when divisible; for attention KV the cache
+    *length* axis shards over "model" when divisible (kv heads rarely divide
+    16); mamba heads / xlstm channels shard over "model"."""
+    bx = sh.serve_batch_axes(mesh)
+    bsz = 1
+    for a in bx:
+        bsz *= mesh.shape[a]
+    b_ax = bx if (bsz > 1 and batch % bsz == 0) else None
+    msz = mesh.shape.get("model", 1)
+
+    def for_leaf(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        shp = leaf.shape
+        if "slot_pos" in names:
+            return P()
+        if names[0] == "kv" or "cross" in names[0]:
+            # (L, B, W, KV, hd)
+            w_ax = "model" if shp[2] % msz == 0 else None
+            return P(None, b_ax, w_ax, None, None)
+        if names[0] == "mamba":
+            if names[-1] == "conv":      # (L, B, K, di)
+                return P(None, b_ax, None,
+                         "model" if shp[3] % msz == 0 else None)
+            # ssm (L, B, H, N, P)
+            return P(None, b_ax, "model" if shp[2] % msz == 0 else None,
+                     None, None)
+        if names[0] == "mlstm":
+            # (g, n_m, B, H, P, P) or (g, n_m, B, H, P)
+            h_ax = "model" if shp[3] % msz == 0 else None
+            rest = (None,) * (len(shp) - 4)
+            return P(None, None, b_ax, h_ax, *rest)
+        if names[0] == "slstm":
+            # (g, B, di)
+            return P(None, b_ax, "model" if shp[2] % msz == 0 else None)
+        return P(*( (None,) * len(shp) ))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    out = [for_leaf(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                     *, t_inner: int = 4, opt_name: str = "sgd",
+                     lr: float = 1e-3, mode: str = "localsgd",
+                     schedule: str = "rect", moe_impl: Optional[str] = None,
+                     policy: str = "tp") -> BuiltStep:
+    """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
+    (replicate params, batch over the model axis — small archs), or "tp"
+    on an fsdp mesh (params additionally sharded over "fsdp")."""
+    if moe_impl:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    model = build_model(cfg, schedule=schedule)
+    if "fsdp" in mesh.axis_names and policy == "tp":
+        model = _fsdp_model(cfg, mesh, model, schedule,
+                            act_axes=("fsdp",))
+    if cfg.param_dtype != "float32":
+        from repro.models.layers import is_pdef
+        model.defs = jax.tree.map(
+            lambda d: dataclasses.replace(d, dtype=cfg.param_dtype),
+            model.defs, is_leaf=is_pdef)
+    opt = optim.get(opt_name, lr)
+    dp = sh.dp_axes(mesh)
+    pspecs = sh.resolve_specs(model.defs, mesh, policy=policy)
+    pspecs = _drop_fsdp_outside_blocks(pspecs)
+    params_abs = model.abstract()
+
+    if mode == "sync":
+        step = lsgd.make_sync_step(model.loss, opt)
+        B = shape.global_batch
+        batch_abs, bspecs = batch_abstract(cfg, (B,), shape.seq_len, mesh,
+                                           leading_group=False)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        ospecs = _opt_specs(opt_abs, pspecs, group=())
+        state_abs = {"params": params_abs, "opt": opt_abs}
+        sspecs = {"params": pspecs, "opt": ospecs}
+        return BuiltStep(
+            step, (state_abs, batch_abs),
+            (_ns(mesh, sspecs), _ns(mesh, bspecs)),
+            (_ns(mesh, sspecs), None),
+            {"mode": "sync", "tokens": B * shape.seq_len, "t_inner": 1})
+
+    # local-SGD round (the paper's algorithm)
+    G = sh.n_groups(mesh)
+    assert shape.global_batch % G == 0, (shape.global_batch, G)
+    b = shape.global_batch // G
+    lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
+                               inner_mode="fixed_batch")
+    round_ = lsgd.make_local_round(model.loss, opt, lcfg)
+
+    params_G = jax.tree.map(lambda s: SDS((G,) + s.shape, s.dtype),
+                            params_abs)
+    pspecs_G = _drop_fsdp_outside_blocks(
+        sh.resolve_specs(model.defs, mesh, leading=dp, policy=policy))
+    opt_1 = jax.eval_shape(opt.init, params_abs)
+    opt_G = jax.tree.map(lambda s: SDS((G,) + s.shape, s.dtype), opt_1)
+    ospecs_G = _opt_specs(opt_G, pspecs_G, group=dp)
+    state_abs = {"params": params_G, "opt": opt_G}
+    sspecs = {"params": pspecs_G, "opt": ospecs_G}
+    inner_axis = None
+    if policy == "dp":
+        inner_axis = "model"
+    elif "fsdp" in mesh.axis_names:
+        inner_axis = "fsdp"
+    batch_abs, bspecs = batch_abstract(cfg, (G, b), shape.seq_len, mesh,
+                                       leading_group=True,
+                                       inner_axis=inner_axis)
+    return BuiltStep(
+        round_, (state_abs, batch_abs),
+        (_ns(mesh, sspecs), _ns(mesh, bspecs)),
+        (_ns(mesh, sspecs), None),
+        {"mode": "localsgd", "groups": G, "per_group": b,
+         "tokens": shape.global_batch * shape.seq_len * t_inner,
+         "t_inner": t_inner, "policy": policy,
+         "param_dtype": cfg.param_dtype})
+
+
+def _fsdp_model(cfg, mesh: Mesh, model, schedule: str, act_axes):
+    """Rebuild the model with the fsdp hooks (see DESIGN.md §5b):
+    params rest fsdp-sharded; a with_sharding_constraint in the scan
+    body gathers ONE layer's weights at a time (its transpose
+    reduce-scatters the grads), and a second constraint pins activations
+    to batch-over-act_axes — without them XLA's propagation re-shards
+    seq-length activations instead."""
+    from repro.models.layers import is_pdef
+
+    blocks = model.defs.get("blocks")
+    if blocks is None:
+        return model
+    per_layer = jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=d.shape[1:],
+                                      axes=d.axes[1:]),
+        blocks, is_leaf=is_pdef)
+    gspecs = jax.tree.map(
+        lambda s: P(*[None if e == "fsdp" else e for e in tuple(s)]),
+        sh.resolve_specs(per_layer, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+
+    def hook(p, _gs=gspecs):
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)), p, _gs)
+
+    ax = act_axes[0] if len(act_axes) == 1 else tuple(act_axes)
+
+    def act_hook(x):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(ax, None, None)))
+
+    return build_model(cfg, schedule=schedule, layer_param_hook=hook,
+                       layer_act_hook=act_hook)
+
+
+def _drop_fsdp_outside_blocks(pspecs):
+    """Embed / lm_head / final_norm keep vocab->model sharding only:
+    fsdp-sharding their d_model axis is the matmul contraction dim of the
+    LM head, which would force all-gathers of (B,S,D) activations."""
+    if not isinstance(pspecs, dict):
+        return pspecs
+    out = {}
+    for k, v in pspecs.items():
+        if k == "blocks":
+            out[k] = v
+        else:
+            out[k] = jax.tree.map(
+                lambda s: P(*[None if e == "fsdp" else e
+                              for e in tuple(s)]),
+                v, is_leaf=lambda x: isinstance(x, P))
+    return out
+
+
+def _opt_specs(opt_abs, pspecs, group):
+    out = {}
+    for k in opt_abs:
+        if k == "count":
+            out[k] = P(group) if group else P()
+        else:
+            out[k] = pspecs
+    return out
+
+
+def build_prefill_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                       schedule: str = "rect", policy: str = "tp"
+                       ) -> BuiltStep:
+    """policy="dp": replicate params and shard the batch over every mesh
+    axis — removes the TP activation all-reduces that dominate small
+    archs (xlstm/zamba prefill, §Perf)."""
+    model = build_model(cfg, schedule=schedule)
+    if "fsdp" in mesh.axis_names and policy == "tp":
+        # serving has no local-SGD groups: the whole batch shards over
+        # (data, fsdp); layer hooks gather weights layer-by-layer
+        model = _fsdp_model(cfg, mesh, model, schedule,
+                            act_axes=sh.serve_batch_axes(mesh))
+    if cfg.param_dtype != "float32":
+        from repro.models.layers import is_pdef
+        model.defs = jax.tree.map(
+            lambda d: dataclasses.replace(d, dtype=cfg.param_dtype),
+            model.defs, is_leaf=is_pdef)
+    pspecs = _drop_fsdp_outside_blocks(
+        sh.resolve_specs(model.defs, mesh, policy=policy))
+    params_abs = model.abstract()
+    B = shape.global_batch
+    batch_abs, bspecs = batch_abstract(cfg, (B,), shape.seq_len, mesh,
+                                       leading_group=False)
+    if policy == "dp":
+        # batch over ALL axes (serve axes + model)
+        axes = tuple(a for a in mesh.axis_names if mesh.shape[a] > 1)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if total > 1 and B % total == 0:
+            bspecs = jax.tree.map(
+                lambda s: P(*((axes,) + tuple(s)[1:])), bspecs,
+                is_leaf=lambda x: isinstance(x, P))
+
+    def prefill(params, batch):
+        x, _ = model.forward(params, batch)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        last = x[:, -1:]
+        return jnp.einsum("bsd,dv->bsv", last,
+                          head.astype(last.dtype)).astype(jnp.float32)
+
+    return BuiltStep(
+        prefill, (params_abs, batch_abs),
+        (_ns(mesh, pspecs), _ns(mesh, bspecs)), None,
+        {"mode": "prefill", "tokens": B * shape.seq_len})
+
+
+def build_decode_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh
+                      ) -> BuiltStep:
+    """One-token serve step with a cache sized for the shape.
+
+    long_500k: attention-bearing archs use the sliding-window variant
+    (cache_len = cfg.long_context_window); SSM state is O(1) regardless.
+    """
+    model = build_model(cfg)
+    if cfg.param_dtype != "float32":
+        from repro.models.layers import is_pdef
+        model.defs = jax.tree.map(
+            lambda d: dataclasses.replace(d, dtype=cfg.param_dtype),
+            model.defs, is_leaf=is_pdef)
+    B = shape.global_batch
+    if shape.name == "long_500k":
+        cache_len = min(cfg.long_context_window, shape.seq_len)
+    else:
+        cache_len = shape.seq_len
+    pspecs = _drop_fsdp_outside_blocks(sh.resolve_specs(model.defs, mesh))
+    params_abs = model.abstract()
+    cache_abs = model.init_cache(B, cache_len, abstract=True)
+    cspecs = cache_specs(cfg, cache_abs, mesh, B)
+    tok = SDS((B, 1), jnp.int32)
+    tok_spec = sh.batch_spec(mesh, B, False)
+    tspec = P(*(tuple(tok_spec) + (None,)))
+    pos = SDS((), jnp.int32)
+
+    def decode(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return BuiltStep(
+        decode, (params_abs, cache_abs, tok, pos),
+        (_ns(mesh, pspecs), _ns(mesh, cspecs), NamedSharding(mesh, tspec),
+         NamedSharding(mesh, P())),
+        None,
+        {"mode": "decode", "cache_len": cache_len, "tokens": B})
+
+
+def build_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, **kw
+               ) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh,
+                                  schedule=kw.get("schedule", "rect"),
+                                  policy=kw.get("policy", "tp"))
+    return build_decode_step(cfg, shape, mesh)

@@ -1,0 +1,136 @@
+"""Training launcher: the paper's local-SGD schedule (or the sync-DP
+baseline) on any assigned architecture.
+
+On this CPU container run reduced configs:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --reduced \
+      --rounds 10 --t-inner 4
+On a TPU pod the same entry point runs the full config on the production
+mesh (--mesh pod).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import get_config
+from repro.core import localsgd as lsgd
+from repro.core.controller import AdaptiveT
+from repro.data.synthetic import TokenPipeline
+from repro.models import build_model
+
+
+def add_modalities(batch, cfg, rng):
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(rng.randn(
+            *batch["tokens"].shape[:-1], cfg.n_patches, cfg.d_model)
+            .astype(np.float32))
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(rng.randn(
+            *batch["tokens"].shape[:-1], cfg.n_frames, cfg.d_model)
+            .astype(np.float32))
+    return batch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-lenet")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mode", default="localsgd",
+                    choices=["localsgd", "sync"])
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--per-group", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--t-inner", type=int, default=4)
+    ap.add_argument("--t-i", default="",
+                    help="comma-separated per-node T_i (paper Alg 1), "
+                         "e.g. --t-i 1,4,8,16; max becomes the scan bound")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="T_i=inf mode: local steps until ||g||^2<=eps")
+    ap.add_argument("--adaptive-t", action="store_true",
+                    help="Sec-4 controller: set T from detected decay")
+    ap.add_argument("--cost-ratio", type=float, default=0.01,
+                    help="r = C_g/C_c for the adaptive controller")
+    ap.add_argument("--opt", default="sgd")
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, schedule="rect")
+    params = model.init(jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M mode={args.mode}")
+
+    opt = optim.get(args.opt, args.lr)
+    G = args.groups
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, seed=args.seed)
+    rng = np.random.RandomState(args.seed)
+
+    if args.mode == "sync":
+        step = jax.jit(lsgd.make_sync_step(model.loss, opt))
+        state = lsgd.init_state(params, opt)
+        batches = pipe.batches((G * args.per_group,))
+        for n in range(args.rounds):
+            batch = add_modalities(
+                {"tokens": jnp.asarray(next(batches)["tokens"])}, cfg, rng)
+            t0 = time.time()
+            state, m = step(state, batch)
+            if n % args.log_every == 0:
+                print(f"step {n:4d} loss {float(m['loss']):.4f} "
+                      f"gsq {float(m['grad_sq']):.3e} "
+                      f"({time.time() - t0:.2f}s)")
+        final = state["params"]
+    else:
+        t_i = None
+        t_inner = args.t_inner
+        if args.t_i:
+            t_i = tuple(int(v) for v in args.t_i.split(","))
+            assert len(t_i) == G, (t_i, G)
+            t_inner = max(t_i)
+        lcfg = lsgd.LocalSGDConfig(
+            n_groups=G, inner_steps=t_inner, t_i=t_i,
+            threshold=args.threshold, max_inner=500)
+        rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg))
+        state = lsgd.init_state(params, opt, n_groups=G)
+        batches = pipe.batches((G, args.per_group))
+        ctl = AdaptiveT(r=args.cost_ratio) if args.adaptive_t else None
+        t_cur = args.t_inner
+        for n in range(args.rounds):
+            batch = add_modalities(
+                {"tokens": jnp.asarray(next(batches)["tokens"])}, cfg, rng)
+            t0 = time.time()
+            if ctl is not None and t_cur != lcfg.inner_steps:
+                lcfg = lsgd.LocalSGDConfig(
+                    n_groups=G, inner_steps=t_cur, max_inner=500)
+                rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg))
+            state, m = rnd(state, batch)
+            if ctl is not None and "grad_sq_traj" in m:
+                t_cur = ctl.update(np.asarray(m["grad_sq_traj"])[0])
+            if n % args.log_every == 0:
+                print(f"round {n:4d} loss {float(jnp.mean(m['loss'])):.4f} "
+                      f"gsq {float(jnp.mean(m['grad_sq'])):.3e} "
+                      f"T {int(jnp.max(m['inner_steps']))} "
+                      f"({time.time() - t0:.2f}s)")
+        final = lsgd.server_params(state)
+
+    if args.checkpoint:
+        ckpt_io.save(args.checkpoint, final,
+                     metadata={"arch": cfg.name, "rounds": args.rounds,
+                               "mode": args.mode})
+        print(f"checkpoint -> {args.checkpoint}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Shared layer primitives + the ParamDef declaration system.
+
+Params are declared as a pytree of ``ParamDef`` leaves carrying shape,
+*logical* axis names and an init function. The same declaration tree yields:
+  * materialized parameters        (``init_params``)
+  * ShapeDtypeStructs for dry-runs (``abstract_params``)
+  * ``PartitionSpec``s             (``repro.sharding.specs.resolve_specs``)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# ParamDef
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, same rank as shape
+    init: str = "normal"             # normal | zeros | ones | small_normal
+    scale: float = 0.02
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def pdef(shape, axes, init="normal", scale=0.02, dtype="float32") -> ParamDef:
+    return ParamDef(tuple(shape), tuple(axes), init, scale, dtype)
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _materialize(d: ParamDef, key) -> jax.Array:
+    dt = jnp.dtype(d.dtype)
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    scale = d.scale
+    if d.init == "small_normal":
+        scale = d.scale * 0.1
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dt)
+
+
+def init_params(defs, key):
+    """Materialize a ParamDef tree into an array pytree."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_pdef)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_materialize(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree for .lower() dry-runs — no allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        defs, is_leaf=is_pdef)
+
+
+def stack_defs(defs, n: int, axis_name: str = "layers"):
+    """Prepend a stacked leading axis (for scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes,
+                           d.init, d.scale, d.dtype),
+        defs, is_leaf=is_pdef)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x, weight, eps: float = 1e-5):
+    """qk-norm: RMS over the trailing head_dim of (..., H, hd)."""
+    return rms_norm(x, weight, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, hd/2)
+    sin = jnp.sin(ang)[..., None, :]                       # (..., S, 1, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, dim / d)
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang[:, : (d - d // 2)]))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """Mean next-token CE. logits (..., V) fp32; labels int (...)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

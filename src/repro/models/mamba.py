@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) block — TPU-native chunked formulation.
+
+The GPU reference implements SSD with warp-level scans; here the insight is
+re-expressed as *chunked* matmuls (MXU-friendly): within a chunk of length L
+the state-space kernel is a masked (L, L) matmul, and chunks are linked by a
+`lax.scan` over per-chunk summarized states — the standard TPU adaptation
+(intra-chunk quadratic + inter-chunk linear recurrence).
+
+Shapes: d_inner = expand * d_model, split into H heads of head dim P=64
+(P = d_inner for tiny smoke configs). B/C projections are shared across
+heads (n_groups=1), state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import pdef, rms_norm
+
+P_HEADDIM = 64
+
+
+def mamba_dims(cfg):
+    di = cfg.d_inner
+    p = min(P_HEADDIM, di)
+    h = di // p
+    return di, h, p, cfg.ssm_state
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    di, h, p, n = mamba_dims(cfg)
+    return {
+        "w_z": pdef((d, di), ("embed", "inner")),
+        "w_x": pdef((d, di), ("embed", "inner")),
+        "w_b": pdef((d, n), ("embed", None)),
+        "w_c": pdef((d, n), ("embed", None)),
+        "w_dt": pdef((d, h), ("embed", None)),
+        "dt_bias": pdef((h,), (None,), init="zeros"),
+        "a_log": pdef((h,), (None,), init="zeros"),
+        "d_skip": pdef((h,), (None,), init="ones"),
+        "conv_w": pdef((cfg.d_conv, di), (None, "inner"), scale=0.1),
+        "conv_b": pdef((di,), ("inner",), init="zeros"),
+        "norm": pdef((di,), ("inner",), init="ones"),
+        "w_out": pdef((di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(xc, conv_w, conv_b):
+    """Depthwise causal conv, kernel K (small): sum of shifted inputs."""
+    K = conv_w.shape[0]
+    out = xc * conv_w[K - 1]
+    for k in range(1, K):
+        shifted = jnp.pad(xc, ((0, 0), (k, 0), (0, 0)))[:, : xc.shape[1]]
+        out = out + shifted * conv_w[K - 1 - k]
+    return out + conv_b
+
+
+def _ssm_inputs(p, x, cfg):
+    di, h, hp, n = mamba_dims(cfg)
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"].astype(dt_))
+    xc = jnp.einsum("bsd,di->bsi", x, p["w_x"].astype(dt_))
+    bmat = jnp.einsum("bsd,dn->bsn", x, p["w_b"].astype(dt_)).astype(jnp.float32)
+    cmat = jnp.einsum("bsd,dn->bsn", x, p["w_c"].astype(dt_)).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,) negative
+    return z, xc, bmat, cmat, dt, a
+
+
+def mamba_forward(p, x, cfg):
+    """x (B,S,D) -> (B,S,D), S divisible by cfg.chunk_size."""
+    B, S, D = x.shape
+    di, H, P, N = mamba_dims(cfg)
+    L = cfg.chunk_size
+    assert S % L == 0, (S, L)
+    c = S // L
+
+    z, xc, bmat, cmat, dt, a = _ssm_inputs(p, x, cfg)
+    xc = jax.nn.silu(_causal_conv(xc, p["conv_w"].astype(xc.dtype),
+                                  p["conv_b"].astype(xc.dtype)))
+    xh = xc.reshape(B, c, L, H, P).astype(jnp.float32)
+    bmat = bmat.reshape(B, c, L, N)
+    cmat = cmat.reshape(B, c, L, N)
+    dt = dt.reshape(B, c, L, H)
+    da = dt * a  # (B,c,L,H) negative
+    cum = jnp.cumsum(da, axis=2)  # inclusive cumsum within chunk
+
+    # ---- intra-chunk (quadratic in L, masked) -----------------------------
+    cb = jnp.einsum("bcln,bcmn->bclm", cmat, bmat)              # (B,c,L,L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # decay weight of input j on output i (i >= j), axes (B,c,i,j,H)
+    w_ij = jnp.where(mask[None, None, :, :, None],
+                     jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :]),
+                     0.0)                                        # (B,c,i,j,H)
+    w_ij = w_ij * dt[:, :, None, :, :]                           # * dt_j
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", cb, w_ij, xh)
+
+    # ---- per-chunk summarized states --------------------------------------
+    last = cum[:, :, -1:, :]                                     # (B,c,1,H)
+    w_state = jnp.exp(last - cum) * dt                           # (B,c,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchnp", bmat, w_state, xh)
+    chunk_decay = jnp.exp(last[:, :, 0])                         # (B,c,H)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    def step(s_prev, inp):
+        st, dec, cm, cu = inp  # (B,H,N,P), (B,H), (B,L,N), (B,L,H)
+        y = jnp.einsum("bln,bhnp->blhp", cm, s_prev) * jnp.exp(cu)[..., None]
+        s_next = dec[:, :, None, None] * s_prev + st
+        return s_next, y
+
+    s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+          jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(cum, 1, 0))
+    s_final, y_inter = jax.lax.scan(step, s0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                        # (B,c,L,H,P)
+
+    y = y_intra + y_inter + p["d_skip"][None, None, None, :, None] * xh
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent, O(1) state)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    di, H, P, N = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_cache_shapes(cfg, batch: int, dtype):
+    di, H, P, N = mamba_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, di), dtype),
+        "ssm": jax.ShapeDtypeStruct((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cfg, cache):
+    """One token: x (B,1,D) -> (y (B,1,D), new cache)."""
+    B = x.shape[0]
+    di, H, P, N = mamba_dims(cfg)
+    z, xc, bmat, cmat, dt, a = _ssm_inputs(p, x, cfg)
+    # conv over [state, x_t]
+    window = jnp.concatenate([cache["conv"], xc], axis=1)  # (B,K,di)
+    conv_w = p["conv_w"].astype(xc.dtype)
+    xt = jnp.einsum("bki,ki->bi", window, conv_w) + p["conv_b"].astype(xc.dtype)
+    xt = jax.nn.silu(xt)
+    new_conv = window[:, 1:]
+
+    xh = xt.reshape(B, H, P).astype(jnp.float32)
+    dt1 = dt[:, 0]                                      # (B,H)
+    da = jnp.exp(dt1 * a)                               # (B,H)
+    s = cache["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", bmat[:, 0], dt1, xh)
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], s)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"].astype(x.dtype))
+    return out, {"conv": new_conv, "ssm": s}

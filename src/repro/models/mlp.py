@@ -1,0 +1,40 @@
+"""Feed-forward variants: SwiGLU (llama/qwen/phi/granite/zamba), squared-ReLU
+(nemotron-4), GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import pdef
+
+
+def mlp_defs(cfg, d_ff=None):
+    d = cfg.d_model
+    f = cfg.d_ff if d_ff is None else d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "w_gate": pdef((d, f), ("embed", "ff")),
+            "w_up": pdef((d, f), ("embed", "ff")),
+            "w_down": pdef((f, d), ("ff", "embed")),
+        }
+    return {
+        "w_up": pdef((d, f), ("embed", "ff")),
+        "w_down": pdef((f, d), ("ff", "embed")),
+    }
+
+
+def mlp_forward(p, x, cfg):
+    dt = x.dtype
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+    elif cfg.mlp_type == "relu2":
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jnp.square(jax.nn.relu(u))
+    elif cfg.mlp_type == "gelu":
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.gelu(u)
+    else:
+        raise ValueError(cfg.mlp_type)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))

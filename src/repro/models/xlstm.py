@@ -1,0 +1,234 @@
+"""xLSTM blocks: mLSTM (matrix memory — chunked gated linear attention,
+parallelizable) and sLSTM (scalar memory — sequential `lax.scan`).
+
+TPU adaptation: the mLSTM recurrence  S_t = f_t S_{t-1} + i_t k_t v_t^T,
+y_t = (q_t S_t) / max(|q_t n_t|, 1)  is computed chunkwise exactly like the
+Mamba2 SSD (intra-chunk masked matmuls + inter-chunk state scan) — the same
+MXU-friendly reformulation, since both are gated linear attentions.
+
+Numerics: gates are computed in fp32 with the input gate clipped to
+[-8, 8] instead of carrying the full xLSTM max-stabilizer state — a
+documented simplification (DESIGN.md) that keeps the chunked form simple
+while remaining bounded.  sLSTM uses diagonal recurrent weights (per-channel)
+rather than block-diagonal head mixing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import pdef, rms_norm
+
+ICLIP = 8.0
+
+
+def xlstm_dims(cfg):
+    di = cfg.expand * cfg.d_model
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg):
+    d = cfg.d_model
+    di, h, p = xlstm_dims(cfg)
+    return {
+        "w_up": pdef((d, 2 * di), ("embed", "inner")),
+        "w_q": pdef((di, di), ("inner", None)),
+        "w_k": pdef((di, di), ("inner", None)),
+        "w_v": pdef((di, di), ("inner", None)),
+        "w_if": pdef((d, 2 * h), ("embed", None), scale=0.01),
+        "b_if": pdef((2 * h,), (None,), init="zeros"),
+        "norm": pdef((di,), ("inner",), init="ones"),
+        "w_down": pdef((di, d), ("inner", "embed")),
+    }
+
+
+def _mlstm_qkvg(p, x, cfg):
+    di, H, P = xlstm_dims(cfg)
+    dt_ = x.dtype
+    u = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(dt_))
+    a, z = jnp.split(u, 2, axis=-1)
+    q = jnp.einsum("bsi,ij->bsj", a, p["w_q"].astype(dt_))
+    k = jnp.einsum("bsi,ij->bsj", a, p["w_k"].astype(dt_)) / jnp.sqrt(P).astype(dt_)
+    v = jnp.einsum("bsi,ij->bsj", a, p["w_v"].astype(dt_))
+    gates = (jnp.einsum("bsd,dg->bsg", x, p["w_if"].astype(dt_))
+             .astype(jnp.float32) + p["b_if"])
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)           # (B,S,H)
+    log_f = -jax.nn.softplus(-f_raw)                      # log sigmoid, <= 0
+    ig = jnp.exp(jnp.clip(i_raw, -ICLIP, ICLIP))          # bounded input gate
+    B, S, _ = x.shape
+    shp = (B, S, H, P)
+    return (q.reshape(shp), k.reshape(shp), v.reshape(shp), log_f, ig, z)
+
+
+def mlstm_forward(p, x, cfg):
+    """x (B,S,D) -> (B,S,D); S divisible by cfg.chunk_size."""
+    B, S, D = x.shape
+    di, H, P = xlstm_dims(cfg)
+    L = cfg.chunk_size
+    assert S % L == 0
+    c = S // L
+    q, k, v, log_f, ig, z = _mlstm_qkvg(p, x, cfg)
+
+    qc = q.reshape(B, c, L, H, P).astype(jnp.float32)
+    kc = k.reshape(B, c, L, H, P).astype(jnp.float32)
+    vc = v.reshape(B, c, L, H, P).astype(jnp.float32)
+    lf = log_f.reshape(B, c, L, H)
+    igc = ig.reshape(B, c, L, H)
+    cum = jnp.cumsum(lf, axis=2)
+
+    # intra-chunk: weight of step j on step i (i >= j)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    w_ij = jnp.where(mask[None, None, :, :, None],
+                     jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :]),
+                     0.0) * igc[:, :, None, :, :]          # (B,c,i,j,H)
+    qk = jnp.einsum("bclhp,bcmhp->bchlm", qc, kc)          # (B,c,H,L,L)
+    wt = qk * w_ij.transpose(0, 1, 4, 2, 3)                # (B,c,H,i,j)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", wt, vc)
+
+    # per-chunk summarized state & normalizer
+    last = cum[:, :, -1:, :]
+    w_st = jnp.exp(last - cum) * igc                        # (B,c,L,H)
+    states = jnp.einsum("bclhp,bclh,bclhq->bchpq", kc, w_st, vc)
+    nstates = jnp.einsum("bclhp,bclh->bchp", kc, w_st)
+    chunk_decay = jnp.exp(last[:, :, 0])                    # (B,c,H)
+
+    def step(carry, inp):
+        s_prev, n_prev = carry
+        st, nst, dec, qq, cu = inp
+        expc = jnp.exp(cu)[..., None]                       # (B,L,H,1)
+        y = jnp.einsum("blhp,bhpq->blhq", qq, s_prev) * expc
+        n = jnp.einsum("blhp,bhp->blh", qq, n_prev)[..., None] * expc
+        s_next = dec[:, :, None, None] * s_prev + st
+        n_next = dec[:, :, None] * n_prev + nst
+        return (s_next, n_next), (y, n)
+
+    s0 = jnp.zeros((B, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B, H, P), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (states, nstates, chunk_decay, qc, cum))
+    (_, _), (y_inter, n_inter) = jax.lax.scan(step, (s0, n0), xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)
+    n_inter = jnp.moveaxis(n_inter, 0, 1)
+
+    n_intra = jnp.einsum("bchlm->bclh", wt)[..., None]      # sum_j wt
+    y = y_intra + y_inter
+    n = n_intra + n_inter
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", y, p["w_down"].astype(x.dtype))
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    di, H, P = xlstm_dims(cfg)
+    return {"s": jnp.zeros((batch, H, P, P), jnp.float32),
+            "n": jnp.zeros((batch, H, P), jnp.float32)}
+
+
+def mlstm_cache_shapes(cfg, batch, dtype):
+    di, H, P = xlstm_dims(cfg)
+    return {"s": jax.ShapeDtypeStruct((batch, H, P, P), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, P), jnp.float32)}
+
+
+def mlstm_decode(p, x, cfg, cache):
+    B = x.shape[0]
+    di, H, P = xlstm_dims(cfg)
+    q, k, v, log_f, ig, z = _mlstm_qkvg(p, x, cfg)
+    f = jnp.exp(log_f[:, 0])                                # (B,H)
+    i_ = ig[:, 0]
+    q1 = q[:, 0].astype(jnp.float32)
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    s = f[:, :, None, None] * cache["s"] + i_[:, :, None, None] * \
+        jnp.einsum("bhp,bhq->bhpq", k1, v1)
+    n = f[:, :, None] * cache["n"] + i_[:, :, None] * k1
+    y = jnp.einsum("bhp,bhpq->bhq", q1, s)
+    den = jnp.abs(jnp.einsum("bhp,bhp->bh", q1, n))[..., None]
+    y = (y / jnp.maximum(den, 1.0)).reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_down"].astype(x.dtype))
+    return out, {"s": s, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg):
+    d = cfg.d_model
+    di, _, _ = xlstm_dims(cfg)
+    return {
+        "w_gates": pdef((d, 4 * di), ("embed", "inner"), scale=0.01),
+        "b_gates": pdef((4 * di,), ("inner",), init="zeros"),
+        "r_gates": pdef((4, di), (None, "inner"), scale=0.01),  # diagonal rec.
+        "norm": pdef((di,), ("inner",), init="ones"),
+        "w_down": pdef((di, d), ("inner", "embed")),
+    }
+
+
+def _slstm_step(p_r, carry, g):
+    """g: pre-activation gates (B,4*di) from the input; p_r: (4,di)."""
+    h, cst, n = carry
+    di = h.shape[-1]
+    gz, gi, gf, go = jnp.split(g, 4, axis=-1)
+    gz = gz + h * p_r[0]
+    gi = gi + h * p_r[1]
+    gf = gf + h * p_r[2]
+    go = go + h * p_r[3]
+    zt = jnp.tanh(gz)
+    it = jnp.exp(jnp.clip(gi, -ICLIP, ICLIP))
+    ft = jax.nn.sigmoid(gf)
+    ot = jax.nn.sigmoid(go)
+    c_new = ft * cst + it * zt
+    n_new = ft * n + it
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new)
+
+
+def slstm_forward(p, x, cfg):
+    B, S, D = x.shape
+    di, _, _ = xlstm_dims(cfg)
+    g = (jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(x.dtype))
+         .astype(jnp.float32) + p["b_gates"])
+    r = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, gt):
+        new = _slstm_step(r, carry, gt)
+        return new, new[0]
+
+    h0 = jnp.zeros((B, di), jnp.float32)
+    carry0 = (h0, h0, h0)
+    _, hs = jax.lax.scan(step, carry0, jnp.moveaxis(g, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)             # (B,S,di)
+    hs = rms_norm(hs, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsi,id->bsd", hs, p["w_down"].astype(x.dtype))
+
+
+def init_slstm_cache(cfg, batch, dtype):
+    di, _, _ = xlstm_dims(cfg)
+    z = jnp.zeros((batch, di), jnp.float32)
+    return {"h": z, "c": z, "n": z}
+
+
+def slstm_cache_shapes(cfg, batch, dtype):
+    di, _, _ = xlstm_dims(cfg)
+    sd = jax.ShapeDtypeStruct((batch, di), jnp.float32)
+    return {"h": sd, "c": sd, "n": sd}
+
+
+def slstm_decode(p, x, cfg, cache):
+    g = (jnp.einsum("bsd,dg->bsg", x, p["w_gates"].astype(x.dtype))
+         .astype(jnp.float32) + p["b_gates"])[:, 0]
+    r = p["r_gates"].astype(jnp.float32)
+    h, c, n = _slstm_step(r, (cache["h"], cache["c"], cache["n"]), g)
+    hs = rms_norm(h[:, None].astype(x.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", hs, p["w_down"].astype(x.dtype))
+    return out, {"h": h, "c": c, "n": n}

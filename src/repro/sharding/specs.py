@@ -1,0 +1,125 @@
+"""Divisibility-aware PartitionSpec resolution from ParamDef logical axes.
+
+Rules (see DESIGN.md): the first logical axis on each tensor that (a) has a
+mesh rule and (b) is divisible by the mesh axis size gets sharded; remaining
+axes are replicated. Leading group axes (local-SGD replicas) are added via
+``leading``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamDef, is_pdef
+
+# logical axis -> mesh axis.  "embed" shards over the optional "fsdp" axis
+# (group-internal fully-sharded data parallelism, §Perf hillclimb) — inert
+# on meshes without that axis.
+RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "inner": "model",
+    "embed": "fsdp",
+}
+
+
+def spec_for(d: ParamDef, mesh: Mesh, leading: Tuple[str, ...] = (),
+             policy: str = "tp") -> P:
+    """PartitionSpec for one ParamDef. ``leading`` names the mesh axes the
+    single extra leading dim (the local-SGD G axis) shards over — one spec
+    entry that may be a tuple of mesh axes, e.g. ("pod", "data").
+
+    policy:
+      tp    tensor parallel (default): first divisible logical axis per
+            mesh axis gets sharded (model; plus fsdp if the mesh has it)
+      dp    replicate all params (batch shards over "model" instead —
+            the right layout for small archs where TP all-reduces of
+            seq-length activations dwarf the matmuls)
+    """
+    if leading:
+        entries = [leading[0] if len(leading) == 1 else tuple(leading)]
+    else:
+        entries = []
+    if policy == "dp":
+        return P(*entries) if entries else P()
+    used = set()
+    for i, ax in enumerate(d.axes):
+        mesh_ax = RULES.get(ax)
+        size = d.shape[i]
+        if (mesh_ax and mesh_ax not in used and mesh_ax in mesh.axis_names
+                and size % mesh.shape[mesh_ax] == 0 and size > 0
+                and mesh.shape[mesh_ax] > 1):
+            entries.append(mesh_ax)
+            used.add(mesh_ax)
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def resolve_specs(defs, mesh: Mesh, leading: Tuple[str, ...] = (),
+                  policy: str = "tp"):
+    """PartitionSpec tree matching a ParamDef tree."""
+    return jax.tree.map(lambda d: spec_for(d, mesh, leading, policy), defs,
+                        is_leaf=is_pdef)
+
+
+def shardings(defs, mesh: Mesh, leading: Tuple[str, ...] = (),
+              policy: str = "tp"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        resolve_specs(defs, mesh, leading, policy),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_specs, opt_state_keys=("count", "m", "v"),
+                    group_leading: Tuple[str, ...] = ()):
+    """Optimizer state specs: moment trees mirror the param specs; the step
+    counter is replicated (or group-sharded when a leading G axis exists)."""
+    out = {}
+    for k in opt_state_keys:
+        if k == "count":
+            out[k] = P(group_leading) if group_leading else P()
+        else:
+            out[k] = param_specs
+    return out
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def serve_batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes a serving batch shards over: no local-SGD groups exist in
+    prefill/decode, so the fsdp axis (if any) joins the data axes."""
+    return tuple(a for a in ("pod", "data", "fsdp")
+                 if a in mesh.axis_names and mesh.shape[a] > 1)
+
+
+def n_groups(mesh: Mesh) -> int:
+    total = 1
+    for a in dp_axes(mesh):
+        total *= mesh.shape[a]
+    return total
+
+
+def batch_spec(mesh: Mesh, batch_size: int, leading_group: bool) -> P:
+    """Spec for data batches. leading_group: first axis is the G axis
+    (always sharded over pod+data); otherwise (serve paths) the batch
+    axis shards over pod+data+fsdp when divisible, else stays replicated
+    (e.g. batch=1)."""
+    if leading_group:
+        return P(dp_axes(mesh))
+    axes = serve_batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if axes and total > 1 and batch_size % total == 0:
+        return P(axes)
+    return P()

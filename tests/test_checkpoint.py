@@ -1,0 +1,33 @@
+"""Checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io
+
+
+def test_roundtrip(tmp_path, key):
+    tree = {
+        "params": {"w": jax.random.normal(key, (4, 3)),
+                   "b": jnp.zeros((3,), jnp.bfloat16)},
+        "opt": {"count": jnp.asarray(7, jnp.int32),
+                "mu": {"w": jnp.ones((4, 3))}},
+    }
+    path = str(tmp_path / "ckpt")
+    io.save(path, tree, metadata={"round": 12, "arch": "qwen3-32b"})
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    loaded = io.load(path, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    md = io.load_metadata(path)
+    assert md["round"] == 12 and md["arch"] == "qwen3-32b"
+
+
+def test_roundtrip_list_pytree(tmp_path, key):
+    tree = [jnp.arange(5), {"x": jnp.ones((2, 2))}]
+    path = str(tmp_path / "ckpt2")
+    io.save(path, tree)
+    loaded = io.load(path, tree)
+    np.testing.assert_allclose(loaded[0], tree[0])
+    np.testing.assert_allclose(loaded[1]["x"], tree[1]["x"])

@@ -1,0 +1,85 @@
+"""Assigned-architecture configs match the published shapes exactly."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+
+# (id, family, L, d_model, H, KV, d_ff, vocab, experts, top_k)
+ASSIGNED = [
+    ("phi3.5-moe-42b-a6.6b", "moe", 32, 4096, 32, 8, 6400, 32064, 16, 2),
+    ("zamba2-7b", "hybrid", 81, 3584, 32, 32, 14336, 32000, 0, 0),
+    ("internvl2-1b", "vlm", 24, 896, 14, 2, 4864, 151655, 0, 0),
+    ("granite-moe-1b-a400m", "moe", 24, 1024, 16, 8, 512, 49155, 32, 8),
+    ("whisper-base", "audio", 6, 512, 8, 8, 2048, 51865, 0, 0),
+    ("llama3-405b", "dense", 126, 16384, 128, 8, 53248, 128256, 0, 0),
+    ("qwen1.5-110b", "dense", 80, 8192, 64, 8, 49152, 152064, 0, 0),
+    ("xlstm-1.3b", "ssm", 48, 2048, 4, 4, 0, 50304, 0, 0),
+    ("qwen3-32b", "dense", 64, 5120, 64, 8, 25600, 151936, 0, 0),
+    ("nemotron-4-15b", "dense", 32, 6144, 48, 8, 24576, 256000, 0, 0),
+]
+
+
+@pytest.mark.parametrize(
+    "arch,family,L,d,H,KV,ff,vocab,E,K", ASSIGNED,
+    ids=[a[0] for a in ASSIGNED])
+def test_exact_config(arch, family, L, d, H, KV, ff, vocab, E, K):
+    cfg = get_config(arch)
+    assert cfg.family == family
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == vocab
+    assert cfg.n_experts == E
+    assert cfg.top_k == K
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    for a in ARCH_IDS:
+        assert get_config(a).name == a
+
+
+def test_arch_details():
+    assert get_config("qwen1.5-110b").qkv_bias
+    assert get_config("qwen3-32b").qk_norm
+    assert get_config("nemotron-4-15b").mlp_type == "relu2"
+    assert get_config("zamba2-7b").ssm_state == 64
+    assert get_config("whisper-base").n_encoder_layers > 0
+    assert get_config("internvl2-1b").n_patches > 0
+    assert get_config("whisper-base").n_frames > 0
+
+
+def test_input_shapes():
+    s = INPUT_SHAPES
+    assert s["train_4k"].seq_len == 4096 and s["train_4k"].global_batch == 256
+    assert s["prefill_32k"].seq_len == 32768
+    assert s["prefill_32k"].global_batch == 32
+    assert s["decode_32k"].global_batch == 128
+    assert s["long_500k"].seq_len == 524288 and s["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_invariants(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.d_model % r.n_heads == 0 or r.head_dim
+    assert r.vocab_size <= 1024
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_sane(arch):
+    cfg = get_config(arch)
+    n = cfg.n_params()
+    # order-of-magnitude sanity vs the published sizes
+    published = {
+        "phi3.5-moe-42b-a6.6b": 42e9, "zamba2-7b": 7e9,
+        "internvl2-1b": 0.8e9, "granite-moe-1b-a400m": 1.3e9,
+        "whisper-base": 0.07e9, "llama3-405b": 405e9,
+        "qwen1.5-110b": 110e9, "xlstm-1.3b": 1.3e9,
+        "qwen3-32b": 32e9, "nemotron-4-15b": 15e9,
+    }[arch]
+    assert 0.3 * published < n < 3.5 * published, (arch, n, published)
+    assert cfg.n_active_params() <= n

@@ -1,0 +1,155 @@
+"""Paper-validation tests at test scale (Sec 2.3 / Sec 3 experiments).
+
+Full-size reproductions live in benchmarks/; these assert the paper's
+claims hold qualitatively in seconds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import theory
+from repro.core.reference import run_alg1 as _run_alg1
+from repro.data import convex
+
+
+def run_alg1(losses, w0, lr, T, rounds, threshold=None):
+    """Thin wrapper around the library's reference driver returning
+    (final-iterate 'trajectory' sentinel, global grad-sq residuals)."""
+    out = _run_alg1(losses, w0, lr=lr, T=T, rounds=rounds,
+                    threshold=threshold)
+    return [jnp.asarray(w0), out["w"]], out["gsq"]
+
+
+# ---------------------------------------------------------------------------
+# Sec 2.3.1: Beck-Teboulle feasibility (separation fails -> only 1/n)
+# ---------------------------------------------------------------------------
+
+
+def test_beck_teboulle_converges_to_origin():
+    losses = convex.beck_teboulle_losses()
+    w0 = jnp.array([1.5, 0.8])
+    traj, gsq = run_alg1(losses, w0, lr=0.4, T=10, rounds=300)
+    assert gsq[-1] < 1e-6
+    # iterates approach (0,0), the single intersection point
+    assert float(jnp.linalg.norm(traj[-1])) < 0.3
+    # residuals vanish but slowly (sublinear): late-phase ratio close to 1
+    assert gsq[-1] / gsq[-100] > 0.05
+
+
+def test_beck_teboulle_gsq_about_1_over_n():
+    losses = convex.beck_teboulle_losses()
+    _, gsq = run_alg1(losses, jnp.array([1.5, 0.8]), lr=0.4, T=10,
+                      rounds=400)
+    # fit log gsq ~ -p log n on the tail; paper reports p ~ 1
+    n = np.arange(1, len(gsq) + 1)
+    tail = slice(50, None)
+    p = np.polyfit(np.log(n[tail]), np.log(np.asarray(gsq)[tail]), 1)[0]
+    # Thm 2's O(1/n) is an upper bound — residuals may (and here do)
+    # decay faster than the paper's 1/n reference line
+    assert -4.0 < p < -0.5, p
+
+
+# ---------------------------------------------------------------------------
+# Sec 2.3.2: over-parameterized least squares -> linear rate, all T
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def regression():
+    return convex.make_overparam_regression(n=20, d=200, m=2, seed=0)
+
+
+def test_linear_convergence_all_T(regression):
+    losses = regression.local_losses()
+    w0 = jnp.zeros(200)
+    for T in (1, 10, 100):
+        _, gsq = run_alg1(losses, w0, lr=2.0, T=T, rounds=40)
+        # linear rate: log-residual drops roughly linearly; final tiny
+        assert gsq[-1] < gsq[0] * 1e-4, (T, gsq[0], gsq[-1])
+
+
+def test_threshold_mode_converges(regression):
+    losses = regression.local_losses()
+    _, gsq = run_alg1(losses, jnp.zeros(200), lr=2.0, T=None,
+                      rounds=8, threshold=1e-10)
+    # the averaged global residual plateaus near the local threshold
+    assert gsq[-1] < 1e-4, gsq[-1]
+
+
+def test_larger_T_fewer_rounds(regression):
+    losses = regression.local_losses()
+    w0 = jnp.zeros(200)
+
+    def rounds_to(T, tol=1e-8, cap=200):
+        _, gsq = run_alg1(losses, w0, lr=2.0, T=T, rounds=cap)
+        for i, g in enumerate(gsq):
+            if g < tol:
+                return i + 1
+        return cap
+
+    r1, r10, r100 = rounds_to(1), rounds_to(10), rounds_to(100)
+    assert r10 < r1 and r100 <= r10, (r1, r10, r100)
+
+
+# ---------------------------------------------------------------------------
+# Sec 4: quartic loss -> sub-linear local decay, detected by fit_decay
+# ---------------------------------------------------------------------------
+
+
+def test_quartic_local_decay_is_sublinear():
+    prob = convex.make_overparam_regression(n=10, d=50, m=1, power=2,
+                                            seed=1)
+    f = prob.local_losses()[0]
+    g = jax.jit(jax.grad(f))
+    w = jnp.ones(50) * 0.3
+    traj = []
+    for _ in range(60):
+        gi = g(w)
+        traj.append(float(jnp.sum(gi ** 2)))
+        w = w - 0.5 * gi
+    fit = theory.fit_decay(traj)
+    assert fit is not None and fit.kind == "sublinear", fit
+
+
+def test_quadratic_local_decay_is_linear():
+    prob = convex.make_overparam_regression(n=10, d=50, m=1, power=1,
+                                            seed=1)
+    f = prob.local_losses()[0]
+    g = jax.jit(jax.grad(f))
+    w = jnp.ones(50) * 0.3
+    traj = []
+    for _ in range(40):
+        gi = g(w)
+        traj.append(float(jnp.sum(gi ** 2)))
+        w = w - 1.0 * gi
+    fit = theory.fit_decay(traj)
+    assert fit is not None and fit.kind == "linear", fit
+
+
+# ---------------------------------------------------------------------------
+# Lemma 6: separation constant for affine subspaces
+# ---------------------------------------------------------------------------
+
+
+def test_lemma6_separation_bound(key):
+    d, m, rank = 10, 3, 2
+    ks = jax.random.split(key, m + 2)
+    # random subspaces S_i = ker(A_i) (through 0 so S = ∩ ker A_i)
+    As = [jax.random.normal(ks[i], (rank, d)) for i in range(m)]
+    # orthonormalize rows
+    As = [jnp.linalg.qr(A.T)[0].T for A in As]
+    Q = sum(A.T @ A for A in As) / m
+    svals = jnp.linalg.svd(Q, compute_uv=False)
+    pos = svals[svals > 1e-9]
+    c = 1.0 / float(pos[-1])
+    # check d(x,S) <= c * mean_i d(x,S_i) on random points
+    stacked = jnp.concatenate(As, 0)
+    u, s, vt = jnp.linalg.svd(stacked, full_matrices=False)
+    V = vt[s > 1e-8]
+    for j in range(10):
+        x = jax.random.normal(jax.random.PRNGKey(100 + j), (d,))
+        dS = float(jnp.linalg.norm(V.T @ (V @ x)))
+        mean_di = float(np.mean([jnp.linalg.norm(A @ x) for A in As]))
+        assert dS <= c * mean_di + 1e-5, (dS, c, mean_di)
+        # lower bound of Lemma 6
+        assert mean_di <= dS + 1e-5

@@ -1,0 +1,149 @@
+"""HLO collective parser + trip-count-aware cost analyzer."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo, hlocost
+
+
+def test_shape_bytes():
+    assert hlo.shape_bytes("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert hlo.shape_bytes("bf16[8]{0}") == 16
+    assert hlo.shape_bytes("(f32[4]{0}, s32[2]{0})") == 16 + 8
+    assert hlo.shape_bytes("pred[]") == 1  # scalar: one element
+    assert hlo.shape_bytes("u8[10]{0}") == 10
+
+
+def test_collective_summary_crafted():
+    txt = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}
+  %ag.1 = bf16[2048]{0} all-gather(%y), replica_groups=[2,8]<=[16]
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups=[4,4]<=[16]
+"""
+    s = hlo.collective_summary(txt)
+    assert s["n_collectives"] == 3
+    assert s["bytes_by_kind"]["all-reduce"] == 4096
+    assert s["bytes_by_kind"]["all-gather"] == 4096
+    # reduce-scatter: result x group size
+    assert s["bytes_by_kind"]["reduce-scatter"] == 64 * 4 * 4
+
+
+def test_hlocost_scan_trip_multiplication():
+    """A scan of N matmuls must report ~N x the flops of one matmul."""
+
+    def scanned(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, None, length=10)
+        return x
+
+    def single(x, w):
+        return jnp.tanh(x @ w)
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    t_scan = jax.jit(scanned).lower(x, w).compile().as_text()
+    t_one = jax.jit(single).lower(x, w).compile().as_text()
+    f_scan = hlocost.analyze(t_scan)["flops"]
+    f_one = hlocost.analyze(t_one)["flops"]
+    assert f_one == pytest.approx(2 * 128 ** 3, rel=0.01)
+    assert f_scan == pytest.approx(10 * f_one, rel=0.05)
+
+
+def test_hlocost_nested_scan():
+    """Nested scans multiply trip counts."""
+
+    def nested(x, w):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+            x, _ = jax.lax.scan(inner, x, None, length=4)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, None, length=3)
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(nested).lower(x, w).compile().as_text()
+    res = hlocost.analyze(txt)
+    assert res["flops"] == pytest.approx(12 * 2 * 64 ** 3, rel=0.05)
+    assert res["max_trip_product"] == 12
+
+
+def test_hlocost_dot_flops_rectangular():
+    def f(a, b):
+        return a @ b  # (17,33) @ (33,9)
+
+    a = jax.ShapeDtypeStruct((17, 33), jnp.float32)
+    b = jax.ShapeDtypeStruct((33, 9), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    res = hlocost.analyze(txt)
+    assert res["flops"] == pytest.approx(2 * 17 * 33 * 9, rel=0.01)
+
+
+def test_hlocost_hbm_bytes_positive():
+    def f(x):
+        return jnp.sum(x * 2.0)
+
+    x = jax.ShapeDtypeStruct((1024,), jnp.float32)
+    txt = jax.jit(f).lower(x).compile().as_text()
+    res = hlocost.analyze(txt)
+    assert res["hbm_bytes"] >= 4096  # at least reads the input
+
+
+def test_parse_module_symbol_table():
+    txt = """
+HloModule m
+
+ENTRY %main (p0: f32[4,8], p1: f32[8,2]) -> f32[4,2] {
+  %p0 = f32[4,8]{1,0} parameter(0)
+  %p1 = f32[8,2]{1,0} parameter(1)
+  ROOT %dot.1 = f32[4,2]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    comps, entry = hlocost.parse_module(txt)
+    assert entry == "main"
+    res = hlocost.analyze(txt)
+    assert res["flops"] == 2 * 4 * 8 * 2
+
+
+# ---------------------------------------------------------------------------
+# Property sweep: parser robustness on synthesized HLO fragments
+# ---------------------------------------------------------------------------
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+_DTYPES = ["f32", "bf16", "s32", "u8", "pred", "f16"]
+_BYTES = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1, "pred": 1, "f16": 2}
+
+
+@settings(max_examples=40, deadline=None)
+@given(dtype=st.sampled_from(_DTYPES),
+       dims=st.lists(st.integers(1, 64), min_size=0, max_size=4))
+def test_shape_bytes_property(dtype, dims):
+    n = 1
+    for d in dims:
+        n *= d
+    s = f"{dtype}[{','.join(map(str, dims))}]{{{','.join('0' * 0)}}}"
+    assert hlo.shape_bytes(s) == n * _BYTES[dtype]
+
+
+@settings(max_examples=25, deadline=None)
+@given(g=st.integers(1, 8), s=st.integers(1, 8))
+def test_replica_group_iota_identity(g, s):
+    groups = hlo.replica_group_members(
+        f"x, replica_groups=[{g},{s}]<=[{g * s}]")
+    assert len(groups) == g
+    flat = [d for grp in groups for d in grp]
+    assert flat == list(range(g * s))
+
+
+@settings(max_examples=25, deadline=None)
+@given(a=st.integers(2, 6), b=st.integers(2, 6))
+def test_groups_cross_slow_transpose(a, b):
+    """Transposed iota groups stride by b -> cross any block < a*b."""
+    line = f"x, replica_groups=[{b},{a}]<=[{a},{b}]T(1,0)"
+    groups = hlo.replica_group_members(line)
+    assert groups[0] == [i * b for i in range(a)]
+    assert hlo.groups_cross_slow(line, b)      # strides cross b-blocks
+    assert not hlo.groups_cross_slow(line, a * b)  # one big block

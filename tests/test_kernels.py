@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles (ref.py), swept over shapes/dtypes.
+
+Kernels execute in interpret mode on CPU (the kernel body is validated;
+the same pallas_call compiles with VMEM BlockSpecs on TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_adamw import fused_adamw
+from repro.kernels.mamba_scan import mamba_chunk
+from repro.kernels.rmsnorm import rmsnorm
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,S,hd,bq,bk", [
+    (1, 2, 128, 64, 128, 128),
+    (2, 4, 256, 32, 128, 64),
+    (1, 1, 512, 128, 128, 128),
+    (1, 2, 256, 64, 64, 128),   # unequal q/k blocks
+    (2, 1, 64, 16, 64, 64),     # single block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, H, S, hd, bq, bk, dtype, key):
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (B, H, S, hd), dtype)
+    k = rand(ks[1], (B, H, S, hd), dtype)
+    v = rand(ks[2], (B, H, S, hd), dtype)
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32),
+        atol=TOL[dtype], rtol=TOL[dtype] * 10)
+
+
+def test_flash_attention_causality(key):
+    """Perturbing a future kv position must not change earlier outputs."""
+    B, H, S, hd = 1, 1, 128, 32
+    ks = jax.random.split(key, 3)
+    q = rand(ks[0], (B, H, S, hd), jnp.float32)
+    k = rand(ks[1], (B, H, S, hd), jnp.float32)
+    v = rand(ks[2], (B, H, S, hd), jnp.float32)
+    out1 = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    k2 = k.at[:, :, -1].add(100.0)
+    v2 = v.at[:, :, -1].add(100.0)
+    out2 = flash_attention(q, k2, v2, block_q=64, block_k=64, interpret=True)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], atol=1e-6)
+    assert not np.allclose(out1[:, :, -1], out2[:, :, -1])
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [
+    (4, 64), (2, 8, 128), (1, 31, 33), (300, 256), (1, 1, 1, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype, key):
+    ks = jax.random.split(key, 2)
+    x = rand(ks[0], shape, dtype)
+    w = rand(ks[1], shape[-1:], jnp.float32) + 1.0
+    out = rmsnorm(x, w, eps=1e-5, block_rows=64, interpret=True)
+    want = ref.rmsnorm_ref(x, w, eps=1e-5)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), want.astype(jnp.float32),
+        atol=TOL[dtype], rtol=TOL[dtype] * 10)
+
+
+# ---------------------------------------------------------------------------
+# fused adamw
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 1000, 70000])
+@pytest.mark.parametrize("count,wd", [(1, 0.0), (7, 0.1), (100, 0.01)])
+def test_fused_adamw(n, count, wd, key):
+    ks = jax.random.split(key, 4)
+    p = rand(ks[0], (n,), jnp.float32)
+    g = rand(ks[1], (n,), jnp.float32)
+    m = rand(ks[2], (n,), jnp.float32) * 0.1
+    v = jnp.abs(rand(ks[3], (n,), jnp.float32)) * 0.01
+    got = fused_adamw(p, g, m, v, count=count, lr=1e-3, wd=wd,
+                      block=4096, interpret=True)
+    want = ref.adamw_ref(p, g, m, v, count=count, lr=1e-3, wd=wd)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mamba chunk (SSD intra-chunk)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,c,L,H,N,P", [
+    (1, 1, 8, 2, 4, 4),
+    (2, 3, 16, 2, 8, 8),
+    (1, 2, 128, 4, 64, 64),   # MXU-aligned production tile
+])
+def test_mamba_chunk(B, c, L, H, N, P, key):
+    ks = jax.random.split(key, 5)
+    xh = rand(ks[0], (B, c, L, H, P), jnp.float32)
+    bm = rand(ks[1], (B, c, L, N), jnp.float32)
+    cm = rand(ks[2], (B, c, L, N), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[3], (B, c, L, H), jnp.float32))
+    a = -jnp.abs(rand(ks[4], (H,), jnp.float32)) - 0.1
+    y, st, dec, cum = mamba_chunk(xh, bm, cm, dt, a, interpret=True)
+    for b in range(B):
+        for ci in range(c):
+            yr, str_, decr, cumr = ref.mamba_chunk_ref(
+                xh[b, ci], bm[b, ci], cm[b, ci], dt[b, ci], a)
+            np.testing.assert_allclose(y[b, ci], yr, atol=1e-4, rtol=1e-4)
+            np.testing.assert_allclose(st[b, ci], str_, atol=1e-4, rtol=1e-4)
+            np.testing.assert_allclose(dec[b, ci], decr, atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(cum[b, ci], cumr, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# jit'd public wrappers (ops.py)
+# ---------------------------------------------------------------------------
+
+
+def test_ops_wrappers_jit(key):
+    q = rand(key, (1, 2, 128, 32), jnp.float32)
+    out = ops.flash_attention(q, q, q)
+    assert out.shape == q.shape
+    x = rand(key, (4, 64), jnp.float32)
+    w = jnp.ones((64,))
+    assert ops.rmsnorm(x, w).shape == x.shape
+    p = rand(key, (100,), jnp.float32)
+    new_p, new_m, new_v = ops.fused_adamw(
+        p, p, jnp.zeros_like(p), jnp.zeros_like(p), 1, lr=1e-3)
+    assert new_p.shape == p.shape

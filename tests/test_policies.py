@@ -1,0 +1,151 @@
+"""Sharding policies (§Perf machinery): dp / fsdp specs, the fsdp mesh,
+embed gather-vs-onehot equivalence, and the slow-link collective
+classifier."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch import hlo
+from repro.models import build_model
+from repro.models.api import _embed_lookup
+from repro.models.layers import pdef
+from repro.sharding import specs as sh
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def test_dp_policy_replicates():
+    m = FakeMesh(data=16, model=16)
+    d = pdef((1024, 6400), ("embed", "ff"))
+    assert sh.spec_for(d, m, policy="dp") == P()
+    assert sh.spec_for(d, m, leading=("data",), policy="dp") == P("data")
+
+
+def test_fsdp_rule_shards_embed_axis():
+    m = FakeMesh(data=2, fsdp=8, model=16)
+    d = pdef((16384, 128, 128), ("embed", "heads", None))
+    # heads=128 -> model; embed=16384 -> fsdp
+    assert sh.spec_for(d, m) == P("fsdp", "model")
+    # without an fsdp axis the rule is inert
+    m2 = FakeMesh(data=16, model=16)
+    assert sh.spec_for(d, m2) == P(None, "model")
+
+
+def test_fsdp_rule_one_axis_each():
+    m = FakeMesh(data=2, fsdp=8, model=16)
+    # both dims map to fsdp? no - embed->fsdp only once
+    d = pdef((1024, 512), ("embed", "ff"))
+    assert sh.spec_for(d, m) == P("fsdp", "model")
+
+
+def test_embed_gather_matches_onehot(key):
+    V, D = 64, 16
+    table = jax.random.normal(key, (V, D))
+    toks = jax.random.randint(key, (2, 8), 0, V)
+    a = _embed_lookup(table, toks, jnp.float32, "onehot")
+    b = _embed_lookup(table, toks, jnp.float32, "gather")
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_model_with_gather_embed_runs(key):
+    cfg = dataclasses.replace(get_config("qwen3-32b").reduced(),
+                              embed_impl="gather")
+    model = build_model(cfg, schedule="rect")
+    p = model.init(key)
+    loss = model.loss(p, {"tokens": jnp.zeros((2, 16), jnp.int32)})
+    assert bool(jnp.isfinite(loss))
+
+
+def test_layer_hooks_are_applied(key):
+    """Hooks must not change values (identity semantics here) and must be
+    called once per layer."""
+    cfg = get_config("qwen3-32b").reduced()
+    calls = {"p": 0, "a": 0}
+
+    def ph(p):
+        calls["p"] += 1
+        return p
+
+    def ah(x):
+        calls["a"] += 1
+        return x
+
+    base = build_model(cfg, schedule="rect")
+    hooked = build_model(cfg, schedule="rect", layer_param_hook=ph,
+                         layer_act_hook=ah)
+    params = base.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, cfg.vocab_size)}
+    l0 = base.loss(params, batch)
+    l1 = hooked.loss(params, batch)
+    np.testing.assert_allclose(l0, l1, rtol=1e-6)
+    assert calls["p"] >= 1 and calls["a"] >= 1
+
+
+def test_production_mesh_fsdp_shape():
+    # shape math only (needs no devices beyond validation in dryrun)
+    from repro.launch import mesh as meshmod
+    try:
+        m = meshmod.make_production_mesh(fsdp=8)
+    except RuntimeError:
+        pytest.skip("needs 256 host devices (dry-run only)")
+    assert m.axis_names == ("data", "fsdp", "model")
+
+
+def test_groups_cross_slow():
+    line_model = "all-reduce(%x), replica_groups=[16,16]<=[256]"
+    line_data = "all-reduce(%x), replica_groups=[16,16]<=[16,16]T(1,0)"
+    assert not hlo.groups_cross_slow(line_model, 16)
+    assert hlo.groups_cross_slow(line_data, 16)
+    # explicit form
+    expl = "all-reduce(%x), replica_groups={{0,16,32},{1,17,33}}"
+    assert hlo.groups_cross_slow(expl, 16)
+    assert not hlo.groups_cross_slow(
+        "all-reduce(%x), replica_groups={{0,1,2,3}}", 16)
+
+
+def test_replica_group_members_iota():
+    g = hlo.replica_group_members(
+        "x, replica_groups=[4,4]<=[4,4]T(1,0)")
+    assert g[0] == [0, 4, 8, 12]
+    g2 = hlo.replica_group_members("x, replica_groups=[2,8]<=[16]")
+    assert g2[0] == list(range(8))
+
+
+def test_pallas_attention_path_matches_blocked(key):
+    """cfg.attn_impl='pallas' routes causal self-attention through the
+    Pallas flash kernel (interpret mode) and must agree with the blocked
+    pure-JAX path."""
+    import dataclasses
+
+    from repro.models import attention as attn
+
+    cfg = get_config("qwen3-32b").reduced()
+    cfgp = dataclasses.replace(cfg, attn_impl="pallas")
+    p_defs = attn.attention_defs(cfg)
+    from repro.models.layers import init_params
+    params = init_params(p_defs, key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, cfg.d_model))
+    y_blocked = attn.attention_forward(params, x, cfg, schedule="tri",
+                                       block=128)
+    y_pallas = attn.attention_forward(params, x, cfgp, schedule="tri",
+                                      block=128)
+    np.testing.assert_allclose(y_pallas, y_blocked, atol=2e-4, rtol=2e-3)
+
+
+def test_pallas_model_end_to_end(key):
+    cfg = dataclasses.replace(get_config("qwen3-32b").reduced(),
+                              attn_impl="pallas")
+    model = build_model(cfg, attn_block=128)
+    params = model.init(key)
+    toks = jax.random.randint(key, (1, 128), 0, cfg.vocab_size)
+    loss = model.loss(params, {"tokens": toks})
+    assert bool(jnp.isfinite(loss))

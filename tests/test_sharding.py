@@ -1,0 +1,108 @@
+"""Divisibility-aware PartitionSpec resolution + batch/cache specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import attention as attn
+from repro.models import build_model
+from repro.models.layers import pdef
+from repro.sharding import specs as sh
+
+
+def mesh1():
+    return make_local_mesh(1, 1)
+
+
+class FakeMesh:
+    """Mesh-shaped stand-in with arbitrary axis sizes (no devices needed
+    for pure spec resolution)."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def test_divisible_axis_sharded():
+    m = FakeMesh(data=16, model=16)
+    d = pdef((1024, 6400), ("embed", "ff"))
+    assert sh.spec_for(d, m) == P(None, "model")
+
+
+def test_indivisible_axis_replicated():
+    m = FakeMesh(data=16, model=16)
+    # internvl2: 14 heads don't divide 16
+    d = pdef((896, 14, 64), ("embed", "heads", None))
+    assert sh.spec_for(d, m) == P()
+
+
+def test_first_divisible_rule():
+    m = FakeMesh(data=16, model=16)
+    # both vocab and embed-ff shardable: only the first gets the axis
+    d = pdef((128512, 4096), ("vocab", "ff"))
+    assert sh.spec_for(d, m) == P("model")
+
+
+def test_leading_group_axis_single_pod():
+    m = FakeMesh(data=16, model=16)
+    d = pdef((1024, 512), ("embed", "ff"))
+    assert sh.spec_for(d, m, leading=("data",)) == P("data", None, "model")
+
+
+def test_leading_group_axis_multi_pod():
+    m = FakeMesh(pod=2, data=16, model=16)
+    d = pdef((1024, 512), ("embed", "ff"))
+    got = sh.spec_for(d, m, leading=("pod", "data"))
+    assert got == P(("pod", "data"), None, "model")
+
+
+def test_dp_axes_and_groups():
+    assert sh.dp_axes(FakeMesh(data=16, model=16)) == ("data",)
+    assert sh.dp_axes(FakeMesh(pod=2, data=16, model=16)) == ("pod", "data")
+    assert sh.n_groups(FakeMesh(pod=2, data=16, model=16)) == 32
+
+
+def test_batch_spec():
+    m = FakeMesh(pod=2, data=16, model=16)
+    assert sh.batch_spec(m, 256, False) == P(("pod", "data"))
+    assert sh.batch_spec(m, 1, False) == P()      # indivisible -> replicated
+    assert sh.batch_spec(m, 30, False) == P()
+    assert sh.batch_spec(m, 64, True) == P(("pod", "data"))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "granite-moe-1b-a400m",
+                                  "xlstm-1.3b", "zamba2-7b"])
+def test_specs_are_placeable(arch):
+    """Every resolved spec must be applicable to its param's actual shape
+    (rank & divisibility) on a real 1x1 mesh."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    mesh = mesh1()
+    pspecs = sh.resolve_specs(model.defs, mesh)
+    abs_p = model.abstract()
+
+    def check(s, a):
+        assert isinstance(s, P)
+        assert len(s) <= len(a.shape), (s, a.shape)
+        NamedSharding(mesh, s).shard_shape(a.shape)  # raises if invalid
+
+    jax.tree.map(check, pspecs, abs_p,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_full_config_specs_shard_big_dims():
+    """On a (fake) 16x16 mesh the big tensors of qwen3-32b must shard."""
+    m = FakeMesh(data=16, model=16)
+    cfg = get_config("qwen3-32b")
+    d = attn.attention_defs(cfg)
+    # trailing Nones are stripped by spec_for
+    assert sh.spec_for(d["wq"], m) == P(None, "model")  # 64 heads /16
+    assert sh.spec_for(d["wk"], m) == P()               # 8 kv heads
+    from repro.models.mlp import mlp_defs
+    md = mlp_defs(cfg)
+    for k in md:
+        s = sh.spec_for(md[k], m)
+        assert "model" in jax.tree.leaves(tuple(s)), (k, s)

@@ -1,0 +1,168 @@
+"""Paper Sec 4 quantitative theory: Lambert-W closed form, T* roots,
+asymptotics, decay-order detection, and the adaptive controller."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import theory
+from repro.core.controller import AdaptiveT
+
+
+# ---------------------------------------------------------------------------
+# Lambert W (negative branch)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=st.floats(-1.0 / math.e + 1e-12, -1e-12))
+def test_lambert_w_identity(x):
+    w = theory.lambert_w_neg(x)
+    assert w <= -1.0 + 1e-8
+    assert abs(w * math.exp(w) - x) < 1e-8 * max(1.0, abs(x))
+
+
+def test_lambert_w_boundary():
+    assert abs(theory.lambert_w_neg(-1.0 / math.e) + 1.0) < 1e-12
+    with pytest.raises(ValueError):
+        theory.lambert_w_neg(0.5)
+
+
+# ---------------------------------------------------------------------------
+# T* — linearly convergent local GD (h(t) = beta^t)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("beta", [0.5, 0.8, 0.95])
+@pytest.mark.parametrize("r", [0.1, 0.01, 0.001])
+def test_t_star_linear_matches_bruteforce(beta, r):
+    """The formula's T achieves (near-)optimal cost under the discrete
+    objective that the brute force minimizes (the formula minimizes the
+    continuous bound; the argmins can differ where the cost is flat)."""
+    t_formula = max(int(round(theory.t_star_linear(beta, r))), 1)
+    h = lambda t: beta ** t
+    t_brute = theory.t_star_numeric(r, h, t_max=100_000)
+    c_formula = theory.cost_bound(t_formula, r, h)
+    c_brute = theory.cost_bound(t_brute, r, h)
+    assert c_formula <= 1.1 * c_brute, (t_formula, t_brute,
+                                        c_formula, c_brute)
+
+
+def test_t_star_linear_asymptotic():
+    beta = 0.9
+    for r in [1e-3, 1e-5]:
+        exact = theory.t_star_linear(beta, r)
+        asym = theory.t_star_linear_asymptotic(beta, r)
+        assert abs(exact - asym) / exact < 0.2
+
+
+# ---------------------------------------------------------------------------
+# T* — sub-linearly convergent local GD (h(t) = (1+at)^-beta)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("a,beta", [(2.0, 1.5), (1.0, 2.0), (4.0, 1.2)])
+@pytest.mark.parametrize("r", [0.01, 0.001])
+def test_t_star_sublinear_root(a, beta, r):
+    t = theory.t_star_sublinear(a, beta, r)
+    # satisfies paper Eq. (6)
+    g = r * ((1 + a * t) ** beta - 1) - a * (beta + beta * r * t - 1)
+    scale = r * (1 + a * t) ** beta + a * beta
+    assert abs(g) < 1e-6 * scale
+
+
+@pytest.mark.parametrize("a,beta", [(2.0, 1.5), (1.0, 2.0)])
+def test_t_star_sublinear_matches_bruteforce(a, beta):
+    """Near-optimal cost: Eq-6 minimizes the integral-comparison bound,
+    the brute force the discrete sum — argmins differ on flat costs, but
+    the achieved cost must be within 15%."""
+    r = 0.001
+    t_formula = max(int(round(theory.t_star_sublinear(a, beta, r))), 1)
+    h = lambda t: (1.0 + a * t) ** (-beta)
+    t_brute = theory.t_star_numeric(r, h, t_max=1_000_000)
+    c_formula = theory.cost_bound(t_formula, r, h)
+    c_brute = theory.cost_bound(t_brute, r, h)
+    assert c_formula <= 1.15 * c_brute, (t_formula, t_brute,
+                                         c_formula, c_brute)
+
+
+def test_t_star_sublinear_asymptotic():
+    a, beta = 2.0, 1.5
+    for r in [1e-4, 1e-6]:
+        exact = theory.t_star_sublinear(a, beta, r)
+        asym = theory.t_star_sublinear_asymptotic(a, beta, r)
+        assert abs(exact - asym) / exact < 0.2
+
+
+def test_regime_scaling():
+    """Paper's qualitative conclusion: linear case T* ~ log(1/r), sublinear
+    T* ~ r^(-1/beta) — so for small r the sublinear T* is much larger."""
+    r = 1e-6
+    t_lin = theory.t_star_linear(0.5, r)
+    t_sub = theory.t_star_sublinear(2.0, 1.5, r)
+    assert t_sub > 10 * t_lin, (t_lin, t_sub)
+
+
+def test_quartic_h_params():
+    a, beta = theory.quartic_h_params(l=2)
+    assert a == 2.0 and beta == 1.5
+
+
+# ---------------------------------------------------------------------------
+# Rates
+# ---------------------------------------------------------------------------
+
+
+def test_alpha_sign():
+    assert theory.alpha(0.5, 2.0) > 0     # eta < 2/L
+    assert theory.alpha(1.5, 2.0) < 0     # eta > 2/L
+
+
+def test_theorem3_rho_range():
+    rho = theory.theorem3_rho([0.1], [1.0], [0.5], c=2.0)
+    assert 0.0 < rho < 1.0
+    # stronger convexity (bigger mu) -> faster rate (smaller rho)
+    rho2 = theory.theorem3_rho([0.1], [1.0], [0.9], c=2.0)
+    assert rho2 < rho
+
+
+# ---------------------------------------------------------------------------
+# Decay-order detection + adaptive controller
+# ---------------------------------------------------------------------------
+
+
+def test_fit_decay_linear():
+    beta = 0.8
+    traj = [beta ** t for t in range(20)]
+    fit = theory.fit_decay(traj)
+    assert fit.kind == "linear"
+    assert abs(fit.beta - beta) < 0.05
+
+
+def test_fit_decay_sublinear():
+    a, beta = 2.0, 1.5
+    traj = [(1 + a * t) ** (-beta) for t in range(40)]
+    fit = theory.fit_decay(traj)
+    assert fit.kind == "sublinear"
+    assert abs(fit.beta - beta) < 0.5
+
+
+def test_fit_decay_degenerate():
+    assert theory.fit_decay([1.0]) is None
+    assert theory.fit_decay([0.0, 0.0, 0.0]) is None
+
+
+def test_adaptive_controller_converges_to_tstar():
+    r, beta = 0.01, 0.9
+    ctl = AdaptiveT(r=r, ema=0.0)  # no smoothing: jump straight to T*
+    traj = [beta ** t for t in range(30)]
+    t = ctl.update(traj)
+    want = theory.t_star_linear(beta, r)
+    assert abs(t - want) <= 2.0
+
+
+def test_adaptive_controller_clips():
+    ctl = AdaptiveT(r=1e-12, t_max=50, ema=0.0)
+    traj = [(1 + 2.0 * t) ** (-1.5) for t in range(30)]
+    assert ctl.update(traj) == 50
