@@ -11,7 +11,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 from benchmarks import (ablation_opt_state, comm_reduction,
                         fig2a_feasibility, fig2b_linear_rate,
                         fig3_intersection, fig4_deepnet, fig5_quartic,
-                        fig67_nodes, roofline_report)
+                        fig67_nodes, roofline_report, round_throughput)
 
 BENCHES = [
     ("fig2a_feasibility", fig2a_feasibility.main,
@@ -40,6 +40,9 @@ BENCHES = [
     ("ablation_opt_state", ablation_opt_state.main,
      lambda r: f"adamw final loss avg={r['final_with']:.3f} "
                f"no-avg={r['final_without']:.3f}"),
+    ("round_throughput", round_throughput.main,
+     lambda r: f"packed vs pytree headline="
+               f"{r['headline']['speedup']:.2f}x (bar 1.5x)"),
 ]
 
 

@@ -21,7 +21,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.optim import Optimizer
+from repro.optim import Optimizer, map_moments, packing
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +37,13 @@ class LocalSGDConfig:
     max_inner: int = 1_000        # hard cap for threshold mode
     inner_mode: str = "fixed_batch"    # fixed_batch (paper GD) | microbatch
     average_opt_state: bool = True
+    # Metric granularity of the PACKED round (DESIGN.md §6): "final"
+    # evaluates loss/||grad||^2 once at the round's result (the fixed-T
+    # algorithm needs no per-step diagnostics — materializing them costs
+    # ~2 extra passes over the model per inner step); "traj" matches the
+    # pytree round's per-step trajectories (needed by the Sec-4 adaptive-T
+    # controller). The pytree round always records trajectories.
+    metrics: str = "final"
 
 
 class TrainState(dict):
@@ -62,9 +69,27 @@ def average_groups(tree):
     return jax.tree.map(avg, tree)
 
 
-def grad_sq_norm(grads) -> jax.Array:
+def grad_sq_norm(grads, use_pallas: bool = False) -> jax.Array:
+    """||g||^2. On a packed flat buffer this is ONE fused reduction
+    (optionally the Pallas sq_norm kernel) instead of one partial sum
+    per pytree leaf."""
+    if isinstance(grads, jax.Array):
+        if use_pallas:
+            from repro.kernels import use_interpret
+            from repro.kernels.sq_norm import sq_norm
+            return sq_norm(grads.reshape(-1), interpret=use_interpret())
+        return jnp.sum(jnp.square(grads.astype(jnp.float32)))
     return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                for g in jax.tree.leaves(grads))
+
+
+def _grad_sq_norm_groups(grads_G, use_pallas: bool = False) -> jax.Array:
+    """Per-group ||g||^2 for a (G, N) packed gradient buffer -> (G,)."""
+    if use_pallas:
+        from repro.kernels import use_interpret
+        from repro.kernels.sq_norm import sq_norm_groups
+        return sq_norm_groups(grads_G, interpret=use_interpret())
+    return jnp.sum(jnp.square(grads_G.astype(jnp.float32)), axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -72,14 +97,26 @@ def grad_sq_norm(grads) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig):
+def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
+                     layout: Optional[packing.Layout] = None):
     """Build ``round(state_G, batch_G) -> (state_G, metrics)``.
 
     loss_fn(params, batch) -> scalar.
     state_G: {"params","opt"} with leading G axis on every leaf.
     batch_G: leaves with leading axes (G, ...) for fixed_batch or
              (G, T, ...) for microbatch mode.
+
+    With ``layout`` (and a packed optimizer from ``optim.packed``) the
+    round runs on the flat-buffer fast path: state_G["params"] is one
+    (G, N) f32 buffer, every inner step is one fused update pass, and the
+    server averaging is a single flat mean over G (see DESIGN.md §6).
     """
+    if layout is not None or getattr(opt, "packed", False):
+        if layout is None or not getattr(opt, "packed", False):
+            raise ValueError(
+                "packed rounds need BOTH a packing.Layout and a packed "
+                "optimizer (optim.packed / optim.get(..., packed=True))")
+        return _make_packed_local_round(loss_fn, opt, cfg, layout)
     vg = jax.value_and_grad(loss_fn)
 
     def fixed_batch_group(state, batch, t_i=None):
@@ -163,17 +200,168 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig):
 
 
 # ---------------------------------------------------------------------------
+# Packed fast path: the same round on one flat f32 buffer per state part
+# ---------------------------------------------------------------------------
+
+
+def _avg_opt_flat(opt_state):
+    """Average the (G, N) moment buffers over G; the scalar step counter is
+    shared by construction on the packed path and stays untouched."""
+    return map_moments(average_groups, opt_state)
+
+
+def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
+                             cfg: LocalSGDConfig, layout: packing.Layout):
+    """Flat-buffer local round (see DESIGN.md §6).
+
+    The T-step inner loop scans over fused whole-buffer updates: grads are
+    taken per group (vmapped over G) against the unpacked view of the
+    buffer and packed with one concatenate; ``opt.step`` then updates all
+    G*N elements in one fused pass and the round ends with a single flat
+    mean over G — one all-reduce of the model per round on a mesh.
+
+    cfg.metrics selects the metric contract: "final" (default — the hot
+    path; per-step work is JUST the fused update, loss/||grad||^2 are
+    evaluated once on the round's result) or "traj" (per-step
+    trajectories, matching the pytree round's metrics exactly).
+
+    Not on this path (use the pytree path): threshold (T_i = inf) mode,
+    and per-node t_i with adamw (it needs per-group bias correction).
+    """
+    assert cfg.metrics in ("traj", "final"), cfg.metrics
+    if cfg.threshold is not None:
+        raise NotImplementedError(
+            "threshold (T_i=inf) mode runs on the pytree path")
+    # Anything whose update depends on the step counter (adamw bias
+    # correction, lr schedules) needs per-group counts under t_i, and the
+    # packed path keeps ONE shared scalar count — so refuse those combos.
+    if cfg.t_i is not None and getattr(opt, "count_dependent", False):
+        raise NotImplementedError(
+            "per-node t_i with a count-dependent update (adamw bias "
+            "correction / lr schedules) needs per-group step counts; "
+            "use the pytree path")
+    if cfg.t_i is not None and cfg.inner_mode == "microbatch":
+        raise NotImplementedError(
+            "t_i is only defined for fixed_batch mode (the pytree path "
+            "silently ignores it for microbatch)")
+    use_pallas = getattr(opt, "impl", "jnp") == "pallas"
+    flat_vg = packing.value_and_flat_grad(loss_fn, layout)
+
+    if cfg.t_i is not None:
+        assert len(cfg.t_i) == cfg.n_groups, cfg.t_i
+        assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
+
+    def round_(state_G, batch_G):
+        t_vec = (jnp.asarray(cfg.t_i, jnp.int32)
+                 if cfg.t_i is not None else None)
+
+        traj = cfg.metrics == "traj"
+
+        def body(state, t, batch_t):
+            loss_G, g_G = jax.vmap(flat_vg)(state["params"], batch_t)
+            new_p, new_o = opt.step(state["params"], g_G, state["opt"])
+            if t_vec is not None:
+                keep = (t < t_vec)[:, None]           # (G, 1)
+                new_p = jnp.where(keep, new_p, state["params"])
+                old_o = state["opt"]
+                # same "count stays shared" convention as map_moments —
+                # inline because the mask needs old AND new per key
+                new_o = {k: (v if k == "count"
+                             else jnp.where(keep, v, old_o[k]))
+                         for k, v in new_o.items()}
+            new = {"params": new_p, "opt": new_o}
+            if not traj:
+                # hot path: no per-step diagnostics to materialize — XLA
+                # keeps only the fused update chain
+                return new, None
+            gsq_G = _grad_sq_norm_groups(g_G, use_pallas)
+            return new, (loss_G, gsq_G)
+
+        ts = jnp.arange(cfg.inner_steps)
+        if cfg.inner_mode == "microbatch":
+            # (G, T, ...) -> (T, G, ...) so scan feeds one microbatch/step
+            batches_T = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1),
+                                     batch_G)
+            state_G, ys = jax.lax.scan(
+                lambda s, xs: body(s, xs[0], xs[1]),
+                state_G, (ts, batches_T))
+            last_batch = jax.tree.map(lambda x: x[:, -1], batch_G)
+        else:
+            state_G, ys = jax.lax.scan(
+                lambda s, t: body(s, t, batch_G), state_G, ts)
+            last_batch = batch_G
+
+        n_steps = (t_vec if t_vec is not None
+                   else jnp.full((cfg.n_groups,), cfg.inner_steps,
+                                 jnp.int32))
+        if traj:
+            losses = jnp.swapaxes(ys[0], 0, 1)        # (G, T)
+            gsqs = jnp.swapaxes(ys[1], 0, 1)
+            metrics = {"loss": losses[:, -1],
+                       "inner_steps": n_steps,
+                       "grad_sq": gsqs[:, -1],
+                       "grad_sq_first": gsqs[:, 0],
+                       "grad_sq_traj": gsqs}
+        else:
+            # one extra loss/grad eval at the round's RESULT (note: the
+            # traj metrics report the grad made at step T-1 instead).
+            # Evaluated per leaf — the norm needs no packed gradient, so
+            # skipping the pack saves two full passes over the model.
+            vg = jax.value_and_grad(loss_fn)
+
+            def final_eval(buf, b):
+                loss, g_tree = vg(packing.unpack(buf, layout), b)
+                return loss, grad_sq_norm(g_tree)
+
+            loss_G, gsq_G = jax.vmap(final_eval)(state_G["params"],
+                                                 last_batch)
+            metrics = {"loss": loss_G,
+                       "inner_steps": n_steps,
+                       "grad_sq": gsq_G}
+        # ---- communication: ONE flat mean over G ------------------------
+        new_params = average_groups(state_G["params"])
+        if cfg.average_opt_state:
+            new_opt = _avg_opt_flat(state_G["opt"])
+        else:
+            new_opt = state_G["opt"]
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return round_
+
+
+# ---------------------------------------------------------------------------
 # Conventional baseline: synchronous data parallelism (all-reduce per step)
 # ---------------------------------------------------------------------------
 
 
-def make_sync_step(loss_fn: Callable, opt: Optimizer):
+def make_sync_step(loss_fn: Callable, opt: Optimizer,
+                   layout: Optional[packing.Layout] = None):
     """Standard DP: grads averaged across the whole batch every step.
 
     With params replicated and the batch sharded over ("pod","data"), XLA
     inserts a gradient all-reduce per step — the conventional schedule the
     paper compares against.
+
+    With ``layout`` (and a packed optimizer) the state is the flat (N,)
+    buffer and the update is one fused pass per step.
     """
+    if layout is not None or getattr(opt, "packed", False):
+        if layout is None or not getattr(opt, "packed", False):
+            raise ValueError(
+                "packed sync steps need BOTH a packing.Layout and a "
+                "packed optimizer")
+        use_pallas = getattr(opt, "impl", "jnp") == "pallas"
+        flat_vg = packing.value_and_flat_grad(loss_fn, layout)
+
+        def packed_step(state, batch):
+            loss, g = flat_vg(state["params"], batch)
+            new_p, new_o = opt.step(state["params"], g, state["opt"])
+            return ({"params": new_p, "opt": new_o},
+                    {"loss": loss,
+                     "grad_sq": grad_sq_norm(g, use_pallas)})
+
+        return packed_step
+
     vg = jax.value_and_grad(loss_fn)
 
     def step(state, batch):
@@ -190,13 +378,29 @@ def make_sync_step(loss_fn: Callable, opt: Optimizer):
 # ---------------------------------------------------------------------------
 
 
-def init_state(params, opt: Optimizer, n_groups: Optional[int] = None):
+def init_state(params, opt: Optimizer, n_groups: Optional[int] = None,
+               layout: Optional[packing.Layout] = None):
+    if layout is not None:
+        buf = packing.pack(params, layout)
+        state = {"params": buf, "opt": opt.init(buf)}
+        if n_groups:
+            def rep(x):
+                return jnp.broadcast_to(x[None], (n_groups,) + x.shape)
+
+            state = {"params": rep(buf),
+                     "opt": map_moments(rep, state["opt"])}
+        return state
     state = {"params": params, "opt": opt.init(params)}
     if n_groups:
         state = replicate(state, n_groups)
     return state
 
 
-def server_params(state_G):
-    """The averaged (server) model from a grouped state."""
+def server_params(state_G, layout: Optional[packing.Layout] = None):
+    """The averaged (server) model from a grouped state (as a pytree)."""
+    if layout is not None:
+        buf = state_G["params"]
+        if buf.ndim > 1:
+            buf = jnp.mean(buf, axis=0)
+        return packing.unpack(buf, layout)
     return jax.tree.map(lambda x: jnp.mean(x, axis=0), state_G["params"])

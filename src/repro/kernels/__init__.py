@@ -1,3 +1,24 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+import jax as _jax
+import jax.numpy as _jnp
+
+
+def use_interpret() -> bool:
+    """Single decision point for kernel dispatch: Pallas interpret mode
+    everywhere except a real TPU backend (compiled VMEM kernels)."""
+    return _jax.default_backend() != "tpu"
+
+
+def pad_to_block(block: int, *xs):
+    """Shared 1-D blocking prep for the flat-buffer kernels: clamp the
+    block to n, zero-pad every array to a block multiple.
+
+    Returns (block, grid, padded_arrays, n) — slice outputs back to n."""
+    n = xs[0].shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        xs = tuple(_jnp.pad(x, (0, pad)) for x in xs)
+    return block, (xs[0].shape[0] // block,), xs, n

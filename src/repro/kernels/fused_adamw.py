@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import pad_to_block
+
 
 def _kernel(p_ref, g_ref, m_ref, v_ref, bc_ref, po_ref, mo_ref, vo_ref,
             *, lr, b1, b2, eps, wd):
@@ -33,18 +35,9 @@ def fused_adamw(p, g, m, v, *, count, lr, b1=0.9, b2=0.999, eps=1e-8,
                 wd=0.0, block: int = 65536, interpret: bool = True):
     """Flat 1-D arrays p,g,m,v; count = post-increment step number.
     Returns (new_p, new_m, new_v)."""
-    n = p.shape[0]
-    block = min(block, n)
-    pad = (-n) % block
     c = jnp.asarray(count, jnp.float32)
     bc = jnp.stack([1.0 - b1 ** c, 1.0 - b2 ** c])
-
-    def padded(x, dt=None):
-        x = x if not pad else jnp.pad(x, (0, pad))
-        return x
-
-    pp, gg, mm, vv = padded(p), padded(g), padded(m), padded(v)
-    grid = (pp.shape[0] // block,)
+    block, grid, (pp, gg, mm, vv), n = pad_to_block(block, p, g, m, v)
 
     new_p, new_m, new_v = pl.pallas_call(
         functools.partial(_kernel, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd),
@@ -68,6 +61,6 @@ def fused_adamw(p, g, m, v, *, count, lr, b1=0.9, b2=0.999, eps=1e-8,
         ],
         interpret=interpret,
     )(pp, gg, mm, vv, bc)
-    if pad:
+    if new_p.shape[0] != n:
         new_p, new_m, new_v = new_p[:n], new_m[:n], new_v[:n]
     return new_p, new_m, new_v

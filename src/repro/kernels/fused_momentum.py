@@ -1,0 +1,52 @@
+"""Fused heavy-ball momentum update Pallas kernel.
+
+One VMEM pass over the packed flat buffer (optim.packing) per local step:
+mu <- beta*mu + g; p <- p - lr*mu, with both outputs written from the same
+block read — instead of one HLO fusion chain per pytree leaf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import pad_to_block
+
+
+def _kernel(p_ref, g_ref, mu_ref, po_ref, muo_ref, *, lr, beta):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    mu = mu_ref[...]
+    mu_new = beta * mu + g
+    po_ref[...] = (p - lr * mu_new).astype(po_ref.dtype)
+    muo_ref[...] = mu_new
+
+
+def fused_momentum(p, g, mu, *, lr, beta=0.9, block: int = 65536,
+                   interpret: bool = True):
+    """Flat 1-D arrays p, g, mu. Returns (new_p, new_mu)."""
+    block, grid, (pp, gg, mm), n = pad_to_block(block, p, g, mu)
+
+    new_p, new_mu = pl.pallas_call(
+        functools.partial(_kernel, lr=lr, beta=beta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(pp.shape, p.dtype),
+            jax.ShapeDtypeStruct(pp.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(pp, gg, mm)
+    if new_p.shape[0] != n:
+        new_p, new_mu = new_p[:n], new_mu[:n]
+    return new_p, new_mu

@@ -1,0 +1,39 @@
+"""Fused SGD update Pallas kernel.
+
+The paper's local GD inner loop (T steps per communication) is the hot
+path; on the packed flat buffer (optim.packing) the whole parameter update
+is one VMEM pass: read p and g, write p - lr*g.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import pad_to_block
+
+
+def _kernel(p_ref, g_ref, po_ref, *, lr):
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    po_ref[...] = (p - lr * g).astype(po_ref.dtype)
+
+
+def fused_sgd(p, g, *, lr, block: int = 65536, interpret: bool = True):
+    """Flat 1-D arrays p, g. Returns new_p."""
+    block, grid, (pp, gg), n = pad_to_block(block, p, g)
+
+    new_p = pl.pallas_call(
+        functools.partial(_kernel, lr=lr),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(pp.shape, p.dtype),
+        interpret=interpret,
+    )(pp, gg)
+    return new_p[:n] if new_p.shape[0] != n else new_p

@@ -13,33 +13,66 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_adamw as _ad
+from repro.kernels import fused_momentum as _mo
+from repro.kernels import fused_sgd as _sg
 from repro.kernels import mamba_scan as _ms
 from repro.kernels import rmsnorm as _rn
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels import sq_norm as _sq
+from repro.kernels import use_interpret
 
 
 @partial(jax.jit, static_argnames=("block_q", "block_k"))
 def flash_attention(q, k, v, block_q: int = 128, block_k: int = 128):
     return _fa.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
-                               interpret=not _on_tpu())
+                               interpret=use_interpret())
 
 
 @partial(jax.jit, static_argnames=("eps", "block_rows"))
 def rmsnorm(x, w, eps: float = 1e-5, block_rows: int = 128):
     return _rn.rmsnorm(x, w, eps=eps, block_rows=block_rows,
-                       interpret=not _on_tpu())
+                       interpret=use_interpret())
 
 
-@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "wd"))
+# The optimizer-update wrappers donate their state operands (p, and the
+# moment buffers) so direct callers update in place instead of
+# double-buffering. CAUTION: donation means callers must not reuse a
+# donated input after the call, nor pass the same array as a donated and
+# non-donated argument (e.g. fused_adamw(p, p, ...)). NOTE: the packed
+# training round does NOT go through these wrappers (it calls the kernel
+# modules inside its own jit and gets in-place updates from the outer
+# jit's donate_argnums in launch/); these are the public single-update
+# entry points.
+
+
+@partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "wd"),
+         donate_argnums=(0, 2, 3))
 def fused_adamw(p, g, m, v, count, lr: float, b1: float = 0.9,
                 b2: float = 0.999, eps: float = 1e-8, wd: float = 0.0):
     return _ad.fused_adamw(p, g, m, v, count=count, lr=lr, b1=b1, b2=b2,
-                           eps=eps, wd=wd, interpret=not _on_tpu())
+                           eps=eps, wd=wd, interpret=use_interpret())
+
+
+@partial(jax.jit, static_argnames=("lr",), donate_argnums=(0,))
+def fused_sgd(p, g, lr: float):
+    return _sg.fused_sgd(p, g, lr=lr, interpret=use_interpret())
+
+
+@partial(jax.jit, static_argnames=("lr", "beta"), donate_argnums=(0, 2))
+def fused_momentum(p, g, mu, lr: float, beta: float = 0.9):
+    return _mo.fused_momentum(p, g, mu, lr=lr, beta=beta,
+                              interpret=use_interpret())
+
+
+@jax.jit
+def sq_norm(x):
+    return _sq.sq_norm(x, interpret=use_interpret())
+
+
+@jax.jit
+def sq_norm_groups(x):
+    return _sq.sq_norm_groups(x, interpret=use_interpret())
 
 
 @jax.jit
 def mamba_chunk(xh, bmat, cmat, dt, a):
-    return _ms.mamba_chunk(xh, bmat, cmat, dt, a, interpret=not _on_tpu())
+    return _ms.mamba_chunk(xh, bmat, cmat, dt, a, interpret=use_interpret())

@@ -36,6 +36,21 @@ def adamw_ref(p, g, m, v, *, count, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
     return new_p.astype(p.dtype), m_, v_
 
 
+def sgd_ref(p, g, *, lr):
+    """One SGD step on flat arrays."""
+    return (p - lr * g.astype(jnp.float32)).astype(p.dtype)
+
+
+def momentum_ref(p, g, mu, *, lr, beta=0.9):
+    """One heavy-ball step on flat arrays. Returns (new_p, new_mu)."""
+    mu_ = beta * mu + g.astype(jnp.float32)
+    return (p - lr * mu_).astype(p.dtype), mu_
+
+
+def sq_norm_ref(x):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
 def mamba_chunk_ref(xh, bmat, cmat, dt, a):
     """Single-chunk SSD oracle.
 

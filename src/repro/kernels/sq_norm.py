@@ -1,0 +1,46 @@
+"""Fused squared-L2-norm reduction Pallas kernel.
+
+``grad_sq_norm`` is evaluated every local step (it drives the paper's
+threshold mode and the Sec-4 adaptive-T controller). On a pytree that
+materializes one partial sum per leaf; on the packed flat buffer it is a
+single blocked reduction — the accumulator lives in a (1, 1) output block
+and the sequential TPU grid accumulates into it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def sq_norm(x, *, block: int = 65536, interpret: bool = True) -> jax.Array:
+    """Sum of squares of a flat 1-D array -> f32 scalar."""
+    return sq_norm_groups(x[None], block=block, interpret=interpret)[0]
+
+
+def _kernel_groups(x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(x * x)
+
+
+def sq_norm_groups(x, *, block: int = 65536,
+                   interpret: bool = True) -> jax.Array:
+    """Per-group sum of squares of a (G, N) array -> (G,) f32."""
+    g, n = x.shape
+    block = min(block, n)
+    pad = (-n) % block
+    xx = x if not pad else jnp.pad(x, ((0, 0), (0, pad)))  # zeros: sum ok
+
+    out = pl.pallas_call(
+        _kernel_groups,
+        grid=(g, xx.shape[1] // block),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 1), jnp.float32),
+        interpret=interpret,
+    )(xx)
+    return out[:, 0]

@@ -67,7 +67,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             mode: str = "localsgd", t_inner: int = 4, opt_name: str = "sgd",
             moe_impl: str = "", save_hlo: bool = False,
             policy: str = "tp", fsdp: int = 1, param_dtype: str = "",
-            schedule: str = "rect", embed_impl: str = "") -> dict:
+            schedule: str = "rect", embed_impl: str = "",
+            packed: bool = False) -> dict:
     import dataclasses as _dc
 
     import jax
@@ -87,7 +88,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
     kw = {}
     if shape.kind == "train":
         kw = {"mode": mode, "t_inner": t_inner, "opt_name": opt_name,
-              "policy": policy, "schedule": schedule}
+              "policy": policy, "schedule": schedule, "packed": packed}
         if moe_impl:
             kw["moe_impl"] = moe_impl
     elif shape.kind == "prefill":
@@ -102,7 +103,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
     }
     with mesh:
         jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
-                         out_shardings=built.out_shardings)
+                         out_shardings=built.out_shardings,
+                         donate_argnums=getattr(built, "donate_argnums",
+                                                ()))
         t0 = time.time()
         lowered = jitted.lower(*built.args)
         t1 = time.time()
@@ -216,6 +219,9 @@ def main() -> None:
                     choices=["localsgd", "sync"])
     ap.add_argument("--t-inner", type=int, default=4)
     ap.add_argument("--opt", default="sgd")
+    ap.add_argument("--packed", action="store_true",
+                    help="flat-buffer train round (DESIGN.md §6): records "
+                         "the packed engine's memory/collective profile")
     ap.add_argument("--moe-impl", default="")
     ap.add_argument("--save-hlo", action="store_true")
     # §Perf hillclimb knobs ---------------------------------------------
@@ -248,7 +254,8 @@ def main() -> None:
                       opt_name=args.opt, moe_impl=args.moe_impl,
                       save_hlo=args.save_hlo, policy=args.policy,
                       fsdp=args.fsdp, param_dtype=args.param_dtype,
-                      schedule=args.schedule, embed_impl=args.embed_impl)
+                      schedule=args.schedule, embed_impl=args.embed_impl,
+                      packed=args.packed)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

@@ -20,6 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro import optim
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import localsgd as lsgd
+from repro.optim import packing
 from repro.models import build_model
 from repro.sharding import specs as sh
 
@@ -33,6 +34,9 @@ class BuiltStep:
     in_shardings: Tuple
     out_shardings: Any
     meta: Dict[str, Any]
+    # args to donate when jitting (train states: XLA updates the model in
+    # place over the T-step round instead of double-buffering it)
+    donate_argnums: Tuple[int, ...] = ()
 
 
 def _ns(mesh, spec_tree):
@@ -133,10 +137,15 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      *, t_inner: int = 4, opt_name: str = "sgd",
                      lr: float = 1e-3, mode: str = "localsgd",
                      schedule: str = "rect", moe_impl: Optional[str] = None,
-                     policy: str = "tp") -> BuiltStep:
+                     policy: str = "tp", packed: bool = False) -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
-    on an fsdp mesh (params additionally sharded over "fsdp")."""
+    on an fsdp mesh (params additionally sharded over "fsdp").
+
+    packed=True runs the round on the flat-buffer fast path (DESIGN.md
+    §6): state leaves are single (G, N) f32 buffers sharded over the G
+    axis only (params replicated within a group, like policy="dp"), every
+    inner step is one fused update pass, and the state args are donated."""
     if moe_impl:
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     model = build_model(cfg, schedule=schedule)
@@ -148,6 +157,17 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         model.defs = jax.tree.map(
             lambda d: dataclasses.replace(d, dtype=cfg.param_dtype),
             model.defs, is_leaf=is_pdef)
+    if packed:
+        # the packed buffer shards over the G axis only (replicated within
+        # a group); refuse policy/fsdp selections rather than silently
+        # recording a profile the caller did not ask for
+        if policy != "tp" or "fsdp" in mesh.axis_names:
+            raise NotImplementedError(
+                "packed train steps do not support policy/fsdp sharding "
+                "yet (the flat buffer is replicated within a group); drop "
+                "--packed or the policy/fsdp flags")
+        return _build_packed_train_step(cfg, shape, mesh, model, opt_name,
+                                        lr, mode, t_inner)
     opt = optim.get(opt_name, lr)
     dp = sh.dp_axes(mesh)
     pspecs = sh.resolve_specs(model.defs, mesh, policy=policy)
@@ -202,6 +222,65 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "tokens": shape.global_batch * shape.seq_len * t_inner,
          "t_inner": t_inner, "policy": policy,
          "param_dtype": cfg.param_dtype})
+
+
+def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+                             model, opt_name: str, lr: float, mode: str,
+                             t_inner: int) -> BuiltStep:
+    """Flat-buffer train step (DESIGN.md §6): one (G, N) f32 buffer per
+    state part, sharded over the G axis only — within a group the buffer
+    is replicated (TP-sharded packing is future work). State is donated so
+    XLA updates the model in place across the T-step round.
+
+    impl is pinned to "jnp": the one-fused-pass update is a plain XLA
+    fusion, which GSPMD partitions over the G-sharded buffer. The Pallas
+    kernels are NOT partitionable without shard_map wiring (future PR) —
+    using them here would silently all-gather the (G, N) state every
+    step (DESIGN.md §6)."""
+    opt = optim.get(opt_name, lr, packed=True, impl="jnp")
+    layout = packing.layout_of(model.abstract())
+
+    if mode == "sync":
+        step = lsgd.make_sync_step(model.loss, opt, layout=layout)
+        B = shape.global_batch
+        batch_abs, bspecs = batch_abstract(cfg, (B,), shape.seq_len, mesh,
+                                           leading_group=False)
+        buf = layout.abstract()
+        opt_abs = jax.eval_shape(opt.init, buf)
+        state_abs = {"params": buf, "opt": opt_abs}
+        sspecs = {"params": P(), "opt": {k: P() for k in opt_abs}}
+        return BuiltStep(
+            step, (state_abs, batch_abs),
+            (_ns(mesh, sspecs), _ns(mesh, bspecs)),
+            (_ns(mesh, sspecs), None),
+            {"mode": "sync", "tokens": B * shape.seq_len, "t_inner": 1,
+             "packed": True, "n_flat": layout.size},
+            donate_argnums=(0,))
+
+    G = sh.n_groups(mesh)
+    assert shape.global_batch % G == 0, (shape.global_batch, G)
+    b = shape.global_batch // G
+    lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
+                               inner_mode="fixed_batch")
+    round_ = lsgd.make_local_round(model.loss, opt, lcfg, layout=layout)
+    dp = sh.dp_axes(mesh)
+    buf_G = layout.abstract((G,))
+    opt_abs = jax.eval_shape(opt.init, buf_G)
+    state_abs = {"params": buf_G, "opt": opt_abs}
+    lead = P(dp) if dp else P()
+    sspecs = {"params": lead,
+              "opt": {k: (P() if k == "count" else lead) for k in opt_abs}}
+    batch_abs, bspecs = batch_abstract(cfg, (G, b), shape.seq_len, mesh,
+                                       leading_group=True)
+    return BuiltStep(
+        round_, (state_abs, batch_abs),
+        (_ns(mesh, sspecs), _ns(mesh, bspecs)),
+        (_ns(mesh, sspecs), None),
+        {"mode": "localsgd", "groups": G, "per_group": b,
+         "tokens": shape.global_batch * shape.seq_len * t_inner,
+         "t_inner": t_inner, "policy": "packed", "packed": True,
+         "n_flat": layout.size, "param_dtype": cfg.param_dtype},
+        donate_argnums=(0,))
 
 
 def _fsdp_model(cfg, mesh: Mesh, model, schedule: str, act_axes):

@@ -24,6 +24,7 @@ from repro.core import localsgd as lsgd
 from repro.core.controller import AdaptiveT
 from repro.data.synthetic import TokenPipeline
 from repro.models import build_model
+from repro.optim import packing
 
 
 def add_modalities(batch, cfg, rng):
@@ -59,6 +60,9 @@ def main() -> None:
     ap.add_argument("--cost-ratio", type=float, default=0.01,
                     help="r = C_g/C_c for the adaptive controller")
     ap.add_argument("--opt", default="sgd")
+    ap.add_argument("--packed", action="store_true",
+                    help="flat-buffer fast path: fused whole-model updates"
+                         " on one (G, N) f32 buffer (see DESIGN.md)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default="")
@@ -73,14 +77,16 @@ def main() -> None:
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M mode={args.mode}")
 
-    opt = optim.get(args.opt, args.lr)
+    layout = packing.layout_of(params) if args.packed else None
+    opt = optim.get(args.opt, args.lr, packed=args.packed)
     G = args.groups
     pipe = TokenPipeline(cfg.vocab_size, args.seq, seed=args.seed)
     rng = np.random.RandomState(args.seed)
 
     if args.mode == "sync":
-        step = jax.jit(lsgd.make_sync_step(model.loss, opt))
-        state = lsgd.init_state(params, opt)
+        step = jax.jit(lsgd.make_sync_step(model.loss, opt, layout=layout),
+                       donate_argnums=(0,))
+        state = lsgd.init_state(params, opt, layout=layout)
         batches = pipe.batches((G * args.per_group,))
         for n in range(args.rounds):
             batch = add_modalities(
@@ -91,7 +97,8 @@ def main() -> None:
                 print(f"step {n:4d} loss {float(m['loss']):.4f} "
                       f"gsq {float(m['grad_sq']):.3e} "
                       f"({time.time() - t0:.2f}s)")
-        final = state["params"]
+        final = (packing.unpack(state["params"], layout)
+                 if args.packed else state["params"])
     else:
         t_i = None
         t_inner = args.t_inner
@@ -99,11 +106,16 @@ def main() -> None:
             t_i = tuple(int(v) for v in args.t_i.split(","))
             assert len(t_i) == G, (t_i, G)
             t_inner = max(t_i)
+        # the packed hot path skips per-step metric trajectories unless
+        # the adaptive-T controller needs them
+        metrics = "traj" if args.adaptive_t else "final"
         lcfg = lsgd.LocalSGDConfig(
             n_groups=G, inner_steps=t_inner, t_i=t_i,
-            threshold=args.threshold, max_inner=500)
-        rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg))
-        state = lsgd.init_state(params, opt, n_groups=G)
+            threshold=args.threshold, max_inner=500, metrics=metrics)
+        rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg,
+                                            layout=layout),
+                      donate_argnums=(0,))
+        state = lsgd.init_state(params, opt, n_groups=G, layout=layout)
         batches = pipe.batches((G, args.per_group))
         ctl = AdaptiveT(r=args.cost_ratio) if args.adaptive_t else None
         t_cur = args.t_inner
@@ -113,8 +125,11 @@ def main() -> None:
             t0 = time.time()
             if ctl is not None and t_cur != lcfg.inner_steps:
                 lcfg = lsgd.LocalSGDConfig(
-                    n_groups=G, inner_steps=t_cur, max_inner=500)
-                rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg))
+                    n_groups=G, inner_steps=t_cur, max_inner=500,
+                    metrics=metrics)
+                rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg,
+                                                    layout=layout),
+                              donate_argnums=(0,))
             state, m = rnd(state, batch)
             if ctl is not None and "grad_sq_traj" in m:
                 t_cur = ctl.update(np.asarray(m["grad_sq_traj"])[0])
@@ -123,7 +138,7 @@ def main() -> None:
                       f"gsq {float(jnp.mean(m['grad_sq'])):.3e} "
                       f"T {int(jnp.max(m['inner_steps']))} "
                       f"({time.time() - t0:.2f}s)")
-        final = lsgd.server_params(state)
+        final = lsgd.server_params(state, layout=layout)
 
     if args.checkpoint:
         ckpt_io.save(args.checkpoint, final,

@@ -19,6 +19,16 @@ class Optimizer:
     init: Callable[[Any], Any]
     step: Callable[[Any, Any, Any], tuple]
     name: str = "opt"
+    # Packed fast path (see optim.packing / DESIGN.md §6): params and grads
+    # are flat f32 buffers of shape (..., N) instead of pytrees, and the
+    # whole update is one fused pass. impl: "pallas" (fused kernels) or
+    # "jnp" (one XLA fusion — the CPU fallback).
+    packed: bool = False
+    impl: str = "jnp"
+    # Update depends on the step counter (adamw bias correction, lr
+    # schedules). The packed round keeps ONE shared count, so these are
+    # incompatible with per-node t_i (localsgd guards on this flag).
+    count_dependent: bool = False
 
 
 def sgd(lr: float) -> Optimizer:
@@ -77,7 +87,135 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         new_v = jax.tree.unflatten(td, [o[2] for o in outs])
         return new_p, {"count": c, "m": new_m, "v": new_v}
 
-    return Optimizer(init, step, "adamw")
+    return Optimizer(init, step, "adamw", count_dependent=True)
+
+
+# ---------------------------------------------------------------------------
+# Packed fast path: flat f32 buffers + fused update kernels
+# ---------------------------------------------------------------------------
+#
+# The T-step local loop is the paper's hot path. ``packed(name, lr)`` builds
+# an optimizer whose params/grads are single contiguous f32 buffers (see
+# optim.packing for the layout contract): the whole per-step update runs as
+# one fused Pallas kernel (TPU) or one XLA fusion (CPU fallback), instead
+# of ~10 element-wise HLO ops per pytree leaf. Buffers may carry leading
+# axes (the local-SGD G axis); the update is element-wise so they are
+# raveled through the kernels and reshaped back.
+
+
+def _resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        from repro.kernels import use_interpret
+        return "jnp" if use_interpret() else "pallas"
+    assert impl in ("pallas", "jnp"), impl
+    return impl
+
+
+def map_moments(f, opt_state):
+    """Apply ``f`` to the moment buffers of a packed opt state, leaving
+    the shared scalar step counter untouched — the "'count' is the only
+    shared scalar" convention. Replication and averaging go through here;
+    the t_i mask in localsgd keeps the same convention inline (it needs
+    old and new values per key)."""
+    return {k: (v if k == "count" else f(v)) for k, v in opt_state.items()}
+
+
+def _raveled(fn, *bufs):
+    """Run a flat-kernel fn over arbitrarily-leading-axed buffers."""
+    shape = bufs[0].shape
+    out = fn(*(b.reshape(-1) for b in bufs))
+    if isinstance(out, tuple):
+        return tuple(o.reshape(shape) for o in out)
+    return out.reshape(shape)
+
+
+def packed_sgd(lr: float, *, impl: str = "auto") -> Optimizer:
+    impl = _resolve_impl(impl)
+
+    def init(buf):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def step(buf, grads, state):
+        if impl == "pallas":
+            from repro.kernels import use_interpret
+            from repro.kernels.fused_sgd import fused_sgd
+            new = _raveled(
+                lambda p, g: fused_sgd(p, g, lr=lr,
+                                       interpret=use_interpret()),
+                buf, grads)
+        else:
+            new = buf - lr * grads
+        return new, {"count": state["count"] + 1}
+
+    return Optimizer(init, step, "sgd", packed=True, impl=impl)
+
+
+def packed_momentum(lr: float, beta: float = 0.9, *,
+                    impl: str = "auto") -> Optimizer:
+    impl = _resolve_impl(impl)
+
+    def init(buf):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jnp.zeros_like(buf)}
+
+    def step(buf, grads, state):
+        if impl == "pallas":
+            from repro.kernels import use_interpret
+            from repro.kernels.fused_momentum import fused_momentum
+            new, mu = _raveled(
+                lambda p, g, m: fused_momentum(
+                    p, g, m, lr=lr, beta=beta, interpret=use_interpret()),
+                buf, grads, state["mu"])
+        else:
+            mu = beta * state["mu"] + grads
+            new = buf - lr * mu
+        return new, {"count": state["count"] + 1, "mu": mu}
+
+    return Optimizer(init, step, "momentum", packed=True, impl=impl)
+
+
+def packed_adamw(lr: float, b1: float = 0.9, b2: float = 0.999,
+                 eps: float = 1e-8, weight_decay: float = 0.0, *,
+                 impl: str = "auto") -> Optimizer:
+    impl = _resolve_impl(impl)
+
+    def init(buf):
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jnp.zeros_like(buf),
+                "v": jnp.zeros_like(buf)}
+
+    def step(buf, grads, state):
+        c = state["count"] + 1
+        if impl == "pallas":
+            from repro.kernels import use_interpret
+            from repro.kernels.fused_adamw import fused_adamw
+            new, m, v = _raveled(
+                lambda p, g, m, v: fused_adamw(
+                    p, g, m, v, count=c, lr=lr, b1=b1, b2=b2, eps=eps,
+                    wd=weight_decay, interpret=use_interpret()),
+                buf, grads, state["m"], state["v"])
+        else:
+            # Same math as the per-leaf adamw (bias correction unfolded)
+            # so the packed path is bit-compatible up to fma reassociation.
+            bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+            bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+            m = b1 * state["m"] + (1 - b1) * grads
+            v = b2 * state["v"] + (1 - b2) * jnp.square(grads)
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            new = buf - lr * (upd + weight_decay * buf)
+        return new, {"count": c, "m": m, "v": v}
+
+    return Optimizer(init, step, "adamw", packed=True, impl=impl,
+                     count_dependent=True)
+
+
+_PACKED = {"sgd": packed_sgd, "momentum": packed_momentum,
+           "adamw": packed_adamw}
+
+
+def packed(name: str, lr: float, *, impl: str = "auto", **kw) -> Optimizer:
+    """Packed (flat-buffer, fused-kernel) variant of a base optimizer."""
+    return _PACKED[name](lr, impl=impl, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -86,17 +224,30 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 
 
 def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
-    """Wrap an optimizer so grads are clipped to a global L2 norm first."""
+    """Wrap an optimizer so grads are clipped to a global L2 norm first.
 
-    def step(params, grads, state):
-        leaves = jax.tree.leaves(grads)
-        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                          for g in leaves))
-        scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
-        clipped = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
-        return opt.step(params, clipped, state)
+    Works for packed optimizers too: their grad buffer may carry leading
+    group axes, so the norm is taken over the model (last) axis only —
+    one norm per group, matching the pytree round's per-group clipping.
+    ``dataclasses.replace`` keeps the packed/impl routing flags."""
 
-    return Optimizer(opt.init, step, opt.name + "+clip")
+    if opt.packed:
+        def step(buf, grads, state):
+            gn = jnp.sqrt(jnp.sum(jnp.square(grads.astype(jnp.float32)),
+                                  axis=-1, keepdims=True))
+            scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+            return opt.step(buf, grads * scale.astype(grads.dtype), state)
+    else:
+        def step(params, grads, state):
+            leaves = jax.tree.leaves(grads)
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in leaves))
+            scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+            clipped = jax.tree.map(lambda g: g * scale.astype(g.dtype),
+                                   grads)
+            return opt.step(params, clipped, state)
+
+    return dataclasses.replace(opt, step=step, name=opt.name + "+clip")
 
 
 def cosine_schedule(base_lr: float, warmup: int, total: int,
@@ -129,8 +280,16 @@ def with_schedule(make_opt: Callable[[float], Optimizer], lr_fn) -> Optimizer:
             lambda n, p: p + lr.astype(p.dtype) * (n - p), new_p, params)
         return scaled, new_s
 
-    return Optimizer(unit.init, step, unit.name + "+sched")
+    # replace() keeps the packed/impl routing flags of packed optimizers;
+    # a schedule makes the update count-dependent by definition
+    return dataclasses.replace(unit, step=step, name=unit.name + "+sched",
+                               count_dependent=True)
 
 
-def get(name: str, lr: float, **kw) -> Optimizer:
-    return {"sgd": sgd, "momentum": momentum, "adamw": adamw}[name](lr, **kw)
+def get(name: str, lr: float, *, packed: bool = False, **kw) -> Optimizer:
+    table = _PACKED if packed else {"sgd": sgd, "momentum": momentum,
+                                    "adamw": adamw}
+    if name not in table:
+        raise ValueError(f"unknown optimizer {name!r} (have {sorted(table)}"
+                         f", packed={packed})")
+    return table[name](lr, **kw)

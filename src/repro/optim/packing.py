@@ -1,0 +1,99 @@
+"""Parameter packing: pytree <-> one contiguous flat f32 buffer.
+
+The T local steps between communications are the hot path of the paper's
+algorithm (Alg 1): every inner step updates every parameter. Running that
+loop leaf-by-leaf costs one HLO fusion chain per leaf per step; packing the
+whole tree into a single flat float32 buffer lets the update run as ONE
+fused pass (a Pallas kernel on TPU, one XLA fusion on CPU) and the
+per-round server averaging lower to a single flat all-reduce.
+
+Layout contract (see DESIGN.md §6): a ``Layout`` is a static description —
+leaf order is the treedef flatten order; leaf i occupies
+``buf[offsets[i]:offsets[i]+sizes[i]]`` reshaped to ``shapes[i]`` and cast
+to ``dtypes[i]``. The buffer dtype is always float32. Leading batch axes
+(the local-SGD G axis) stack as leading buffer axes: a G-grouped tree packs
+to ``(G, size)``.
+
+``unpack`` uses static slices (views inside an XLA fusion — no copy);
+``pack`` is one concatenate. Gradients w.r.t. the packed buffer are taken
+per-leaf and packed, NOT by differentiating through ``unpack`` — the
+transpose of a slice is a pad-to-N scatter, which would materialize one
+full-size buffer per leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Static flat-buffer layout for one parameter pytree."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    size: int                      # total number of f32 elements
+
+    def abstract(self, leading: Tuple[int, ...] = ()):
+        """ShapeDtypeStruct of the packed buffer (with leading axes)."""
+        return jax.ShapeDtypeStruct(tuple(leading) + (self.size,),
+                                    jnp.float32)
+
+
+def layout_of(tree) -> Layout:
+    """Build the static layout from a pytree of arrays/ShapeDtypeStructs."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    return Layout(treedef, shapes, dtypes, offsets, sizes,
+                  int(sum(sizes)))
+
+
+def pack(tree, layout: Layout) -> jax.Array:
+    """Flatten a pytree into the contiguous f32 buffer.
+
+    Leaves may carry extra leading axes (all identical, e.g. the local-SGD
+    G axis); they become leading axes of the buffer.
+    """
+    leaves = layout.treedef.flatten_up_to(tree)
+    lead = leaves[0].shape[:leaves[0].ndim - len(layout.shapes[0])]
+    flat = [l.reshape(lead + (-1,)).astype(jnp.float32) for l in leaves]
+    return jnp.concatenate(flat, axis=-1)
+
+
+def unpack(buf: jax.Array, layout: Layout):
+    """Rebuild the pytree (original shapes/dtypes) from the flat buffer.
+
+    Extra leading axes on ``buf`` are carried onto every leaf. Slicing is
+    static, so XLA reads leaves as views of the buffer inside fusions.
+    """
+    lead = buf.shape[:-1]
+    leaves = [
+        buf[..., o:o + s].reshape(lead + sh).astype(dt)
+        for o, s, sh, dt in zip(layout.offsets, layout.sizes,
+                                layout.shapes, layout.dtypes)
+    ]
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def value_and_flat_grad(loss_fn, layout: Layout):
+    """``vg(buf, batch) -> (loss, flat_grad)`` for a pytree loss.
+
+    Differentiates w.r.t. the UNPACKED tree and packs the grads (one
+    concatenate) — never w.r.t. the buffer itself (see module docstring).
+    """
+    vg = jax.value_and_grad(loss_fn)
+
+    def flat_vg(buf, batch):
+        loss, g_tree = vg(unpack(buf, layout), batch)
+        return loss, pack(g_tree, layout)
+
+    return flat_vg

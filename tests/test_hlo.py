@@ -111,7 +111,7 @@ ENTRY %main (p0: f32[4,8], p1: f32[8,2]) -> f32[4,2] {
 # Property sweep: parser robustness on synthesized HLO fragments
 # ---------------------------------------------------------------------------
 
-from hypothesis import given, settings, strategies as st  # noqa: E402
+from _hyp import given, settings, st  # noqa: E402
 
 _DTYPES = ["f32", "bf16", "s32", "u8", "pred", "f16"]
 _BYTES = {"f32": 4, "bf16": 2, "s32": 4, "u8": 1, "pred": 1, "f16": 2}

@@ -10,8 +10,11 @@ import pytest
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_adamw import fused_adamw
+from repro.kernels.fused_momentum import fused_momentum
+from repro.kernels.fused_sgd import fused_sgd
 from repro.kernels.mamba_scan import mamba_chunk
 from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.sq_norm import sq_norm, sq_norm_groups
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -101,6 +104,55 @@ def test_fused_adamw(n, count, wd, key):
 
 
 # ---------------------------------------------------------------------------
+# fused sgd / momentum (the packed local-GD hot path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 1000, 70000])
+def test_fused_sgd(n, key):
+    ks = jax.random.split(key, 2)
+    p = rand(ks[0], (n,), jnp.float32)
+    g = rand(ks[1], (n,), jnp.float32)
+    got = fused_sgd(p, g, lr=0.1, block=4096, interpret=True)
+    np.testing.assert_allclose(got, ref.sgd_ref(p, g, lr=0.1),
+                               atol=1e-7, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [8, 1000, 70000])
+@pytest.mark.parametrize("beta", [0.0, 0.9])
+def test_fused_momentum(n, beta, key):
+    ks = jax.random.split(key, 3)
+    p = rand(ks[0], (n,), jnp.float32)
+    g = rand(ks[1], (n,), jnp.float32)
+    mu = rand(ks[2], (n,), jnp.float32) * 0.1
+    got = fused_momentum(p, g, mu, lr=0.1, beta=beta, block=4096,
+                         interpret=True)
+    want = ref.momentum_ref(p, g, mu, lr=0.1, beta=beta)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, atol=1e-7, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused squared-norm reduction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 1000, 70000])
+def test_sq_norm(n, key):
+    x = rand(key, (n,), jnp.float32)
+    got = sq_norm(x, block=4096, interpret=True)
+    np.testing.assert_allclose(got, ref.sq_norm_ref(x), rtol=1e-5)
+
+
+@pytest.mark.parametrize("g,n", [(1, 64), (3, 1000), (4, 70000)])
+def test_sq_norm_groups(g, n, key):
+    x = rand(key, (g, n), jnp.float32)
+    got = sq_norm_groups(x, block=4096, interpret=True)
+    np.testing.assert_allclose(
+        got, jnp.sum(jnp.square(x), axis=-1), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
 # mamba chunk (SSD intra-chunk)
 # ---------------------------------------------------------------------------
 
@@ -140,7 +192,12 @@ def test_ops_wrappers_jit(key):
     x = rand(key, (4, 64), jnp.float32)
     w = jnp.ones((64,))
     assert ops.rmsnorm(x, w).shape == x.shape
+    # p is donated by the wrapper: pass a distinct gradient buffer
     p = rand(key, (100,), jnp.float32)
+    g = rand(key, (100,), jnp.float32) * 0.1
     new_p, new_m, new_v = ops.fused_adamw(
-        p, p, jnp.zeros_like(p), jnp.zeros_like(p), 1, lr=1e-3)
-    assert new_p.shape == p.shape
+        p, g, jnp.zeros_like(p), jnp.zeros_like(p), 1, lr=1e-3)
+    assert new_p.shape == g.shape
+    new_p2 = ops.fused_sgd(jnp.copy(g), g, 1e-3)
+    assert new_p2.shape == g.shape
+    np.testing.assert_allclose(ops.sq_norm(g), jnp.sum(g * g), rtol=1e-5)
