@@ -7,6 +7,7 @@ baseline is compiled with --mode sync (tag 'sync'); the local-SGD round
 with t_inner=T. Both are normalized to the same token budget, then
 collective bytes per token are compared."""
 import json
+import os
 import subprocess
 import sys
 from pathlib import Path
@@ -29,10 +30,13 @@ def ensure_record(arch: str, mode: str, tag: str, t_inner: int = 4):
            "--shape", SHAPE, "--mode", mode, "--t-inner", str(t_inner)]
     if tag:
         cmd += ["--tag", tag]
+    # inherit the full environment (venv interpreters, PATH, XLA flags)
+    # and only PREPEND our src to PYTHONPATH
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     subprocess.run(cmd, check=True, capture_output=True, text=True,
-                   cwd=str(ROOT), env={"PYTHONPATH": str(ROOT / "src"),
-                                       "PATH": "/usr/bin:/bin"},
-                   timeout=3600)
+                   cwd=str(ROOT), env=env, timeout=3600)
     return json.loads(p.read_text())
 
 

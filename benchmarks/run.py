@@ -8,7 +8,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from benchmarks import (ablation_opt_state, comm_reduction,
+from benchmarks import (ablation_opt_state, comm_bytes, comm_reduction,
                         fig2a_feasibility, fig2b_linear_rate,
                         fig3_intersection, fig4_deepnet, fig5_quartic,
                         fig67_nodes, roofline_report, round_throughput)
@@ -43,6 +43,10 @@ BENCHES = [
     ("round_throughput", round_throughput.main,
      lambda r: f"packed vs pytree headline="
                f"{r['headline']['speedup']:.2f}x (bar 1.5x)"),
+    ("comm_bytes", comm_bytes.main,
+     lambda r: f"int8 wire reduction="
+               f"{r['headline']['int8_reduction_vs_fp32']:.2f}x (bar 3.5x)"
+               f" fig2_int8={'ok' if r['fig2']['int8']['pass'] else 'FAIL'}"),
 ]
 
 

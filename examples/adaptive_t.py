@@ -4,6 +4,13 @@ order on the fly and sets T near the cost-optimal T*.
 Quadratic local losses (linear decay)  -> small T* ~ log(1/r)
 Quartic  local losses (sublinear decay)-> large T* ~ r^(-1/beta)
 
+The last demo instantiates r from MEASURED communication instead of a
+hand-picked constant: the comm subsystem's exact wire-byte accounting
+(repro.comm, DESIGN.md §8) prices one exchange round per codec, and
+``AdaptiveT.from_comm_bytes`` turns that into the cost ratio — cheaper
+wire (int8 ~4x fewer bytes) means relatively pricier local steps, so the
+controller converges to a SMALLER T*.
+
     PYTHONPATH=src python examples/adaptive_t.py
 """
 import sys
@@ -14,18 +21,22 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm as comm_mod
 from repro.core import theory
 from repro.core.controller import AdaptiveT
 from repro.core.reference import make_local_T
 from repro.data.convex import make_overparam_regression
+from repro.launch.roofline import comm_round_seconds
 
 
-def demo(name, power, lr, r):
+def demo(name, power, lr, r=None, ctl=None):
     prob = make_overparam_regression(n=20, d=400, m=2, power=power, seed=0)
     losses = prob.local_losses()
     w = jnp.ones(400) * 0.1
-    ctl = AdaptiveT(r=r, ema=0.3)
-    print(f"-- {name} local losses, cost ratio r={r} --")
+    if ctl is None:
+        ctl = AdaptiveT(r=r, ema=0.3)
+    r = ctl.r
+    print(f"-- {name} local losses, cost ratio r={r:.4g} --")
     T = 50
     for rnd in range(6):
         runners = [make_local_T(f, lr, T) for f in losses]
@@ -44,9 +55,32 @@ def demo(name, power, lr, r):
               f"{theory.t_star_sublinear(fit.a, fit.beta, r):.1f}")
 
 
+def demo_measured_comm(n_model: int = 1_000_000, step_time_s: float = 2e-6):
+    """r from MEASURED comm bytes (codec-aware) instead of a hand-picked
+    constant — the old constant-r path above stays as the fallback.
+
+    The exchange prices one round's exact wire bytes for an
+    ``n_model``-parameter buffer (m=2 server uplinks); cutting the
+    payload with int8 makes communication ~4x cheaper, so r = C_g/C_c
+    rises and the controller settles on a smaller T*."""
+    print(f"-- codec-aware r: server exchange, {n_model/1e6:.0f}M params, "
+          f"step {step_time_s*1e6:.1f}us --")
+    for codec in ("fp32", "int8"):
+        ex = comm_mod.get_exchange("server", codec, n_groups=2)
+        wire = ex.wire_bytes_per_round(n_model)
+        ctl = AdaptiveT.from_comm_bytes(
+            step_time_s, wire, bandwidth_bytes_per_s=50e9, ema=0.3)
+        # equivalently: r = step_time_s / comm_round_seconds(wire)
+        assert abs(ctl.r - step_time_s / comm_round_seconds(wire)) < 1e-12
+        print(f"   codec {codec}: {wire:,} wire bytes/round "
+              f"-> r = {ctl.r:.4g}")
+        demo(f"quadratic ({codec} wire)", power=1, lr=1.0, ctl=ctl)
+
+
 def main():
     demo("quadratic", power=1, lr=1.0, r=0.01)
     demo("quartic", power=2, lr=0.5, r=0.01)
+    demo_measured_comm()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""repro.comm — pluggable communication subsystem (DESIGN.md §8).
+
+The paper's claim is about communication: T local steps amortize ONE model
+exchange per round. This package makes that exchange a first-class layer —
+topologies (server / ring / gossip / async_stale), flat-buffer wire codecs
+(fp32 / fp16 / bf16 / int8 / topk), and exact per-round wire-byte
+accounting — behind the ``Exchange`` protocol that ``core.localsgd`` routes
+both its pytree and packed rounds through.
+"""
+from repro.comm.codecs import CODECS, Codec, get_codec
+from repro.comm.exchange import (TOPOLOGIES, Exchange, default_exchange,
+                                 get_exchange)
+from repro.comm.topology import (gossip_matrix, is_doubly_stochastic,
+                                 mixing_matrix, n_edge_sends, ring_matrix,
+                                 server_matrix, spectral_gap)
+
+__all__ = [
+    "CODECS", "Codec", "get_codec",
+    "TOPOLOGIES", "Exchange", "default_exchange", "get_exchange",
+    "gossip_matrix", "is_doubly_stochastic", "mixing_matrix",
+    "n_edge_sends", "ring_matrix", "server_matrix", "spectral_gap",
+]

@@ -1,0 +1,163 @@
+"""Flat-buffer wire codecs for the communication subsystem (DESIGN.md §8).
+
+A codec compresses what a group puts on the wire each round. Lossy codecs
+are applied to the round DELTA ``x_T - x_0`` (the T local steps' movement),
+not the model itself: deltas shrink as training converges, so the absolute
+quantization error vanishes with them and convex-feasibility convergence
+is preserved (the ``benchmarks/comm_bytes.py`` check). The ``fp32`` codec
+is the identity — the exchange skips the delta arithmetic entirely so the
+default path stays bit-exact with the pre-comm ``average_groups``.
+
+Codec contract:
+  * ``compress(delta, state) -> (delta_hat, state)`` — quantize + dequantize
+    in one step (the simulated wire: every group lives on the same mesh, so
+    the decoded value is what the exchange mixes). ``delta`` is the packed
+    (G, N) buffer for flat-only codecs, any pytree for cast codecs.
+  * ``state`` threads round-to-round codec memory through the train state
+    (``{"comm": ...}``): the int8 rng counter, the top-k error-feedback
+    residual. Stateless codecs use ``{}``.
+  * ``wire_bytes(n)`` — EXACT encoded payload bytes one sender puts on the
+    wire for an n-element f32 buffer. This is the number the wire
+    accounting threads into round metrics and AdaptiveT's cost ratio.
+
+int8 follows the ``impl="jnp"|"pallas"`` convention of the packed
+optimizers: the Pallas kernels (kernels/quantize.py) and the jnp reference
+consume the same stochastic-rounding bits and agree exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import packing
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    name: str
+    compress: Callable[[Any, dict], tuple]
+    wire_bytes: Callable[[int], int]
+    init: Callable[[Any], dict]
+    # identity codecs skip the delta path entirely (bit-exact default)
+    identity: bool = False
+    # flat-only codecs need the packed (G, N) buffer as the wire format
+    flat_only: bool = False
+    stateful: bool = False
+    impl: str = "jnp"
+
+
+def _no_state(_params_like):
+    return {}
+
+
+def fp32() -> Codec:
+    """Identity: the uncompressed baseline (4 bytes/element)."""
+    return Codec("fp32", lambda d, s: (d, s), lambda n: 4 * n, _no_state,
+                 identity=True)
+
+
+def _cast_codec(name: str, dtype) -> Codec:
+    def compress(delta, state):
+        out = jax.tree.map(
+            lambda d: d.astype(dtype).astype(d.dtype), delta)
+        return out, state
+
+    return Codec(name, compress, lambda n: 2 * n, _no_state)
+
+
+def fp16() -> Codec:
+    return _cast_codec("fp16", jnp.float16)
+
+
+def bf16() -> Codec:
+    return _cast_codec("bf16", jnp.bfloat16)
+
+
+def int8(chunk: int = 256, seed: int = 0, *, impl: str = "auto") -> Codec:
+    """Per-chunk-scaled int8 with unbiased stochastic rounding.
+
+    Payload: 1 byte/element + one fp32 scale per ``chunk`` elements
+    (3.94x under fp32 at chunk=256). Rounding noise is zero-mean and
+    bounded by the chunk scale, so the mixed model is an unbiased estimate
+    of the uncompressed mix. The rng counter in the codec state makes the
+    noise deterministic per round (reproducible runs, no host rng)."""
+    from repro.kernels import resolve_impl
+    impl = resolve_impl(impl)
+
+    def init(_params_like):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def compress(delta, state):
+        rows = packing.chunk_rows(delta, chunk)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), state["count"])
+        u = jax.random.uniform(key, rows.shape, jnp.float32)
+        if impl == "pallas":
+            from repro.kernels import use_interpret
+            from repro.kernels.quantize import dequantize_int8, quantize_int8
+            q, scales = quantize_int8(rows, u, interpret=use_interpret())
+            out = dequantize_int8(q, scales, interpret=use_interpret())
+        else:
+            amax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)
+            scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.floor(rows / scale + u),
+                         -127.0, 127.0).astype(jnp.int8)
+            out = q.astype(jnp.float32) * scale
+        return (packing.unchunk_rows(out, delta.shape),
+                {"count": state["count"] + 1})
+
+    return Codec("int8", compress,
+                 lambda n: n + 4 * math.ceil(n / chunk), init,
+                 flat_only=True, stateful=True, impl=impl)
+
+
+def topk(frac: float = 0.05) -> Codec:
+    """Magnitude top-k sparsification with error feedback.
+
+    Only the k = max(1, round(frac*N)) largest-|.| delta entries go on the
+    wire (4-byte value + 4-byte index each); what was dropped accumulates
+    in a per-group residual and is re-offered next round. The accounting
+    identity ``delta + residual_in == delta_hat + residual_out`` holds
+    EXACTLY (the residual update is the same subtraction that defines it),
+    so compression drops nothing — it only delays it."""
+
+    def init(params_like):
+        return {"residual": jnp.zeros_like(params_like)}
+
+    def compress(delta, state):
+        c = delta + state["residual"]
+        k = max(1, int(round(frac * c.shape[-1])))
+
+        def row(v):
+            _, idx = jax.lax.top_k(jnp.abs(v), k)
+            return jnp.zeros_like(v).at[idx].set(v[idx])
+
+        d_hat = row(c) if c.ndim == 1 else jax.vmap(row)(c)
+        return d_hat, {"residual": c - d_hat}
+
+    def wire_bytes(n):
+        return 8 * max(1, int(round(frac * n)))
+
+    return Codec("topk", compress, wire_bytes, init,
+                 flat_only=True, stateful=True)
+
+
+CODECS = ("fp32", "fp16", "bf16", "int8", "topk")
+
+
+def get_codec(name: str, *, impl: str = "auto", chunk: int = 256,
+              topk_frac: float = 0.05, seed: int = 0) -> Codec:
+    if name == "fp32":
+        return fp32()
+    if name == "fp16":
+        return fp16()
+    if name == "bf16":
+        return bf16()
+    if name == "int8":
+        return int8(chunk=chunk, seed=seed, impl=impl)
+    if name == "topk":
+        return topk(frac=topk_frac)
+    raise ValueError(f"unknown codec {name!r} (have {CODECS})")

@@ -1,0 +1,203 @@
+"""Exchange backends: pluggable inter-group communication (DESIGN.md §8).
+
+An ``Exchange`` is the round's communication step — the thing that was a
+hard-coded ``average_groups`` mean before this subsystem existed. It
+composes a TOPOLOGY (who talks to whom) with a CODEC (what goes on the
+wire) and reports exact per-round wire bytes:
+
+  server       star topology: mean over G + broadcast back. With the fp32
+               codec this is the SAME ops as the pre-comm
+               ``average_groups`` — bit-exact, the default.
+  ring/gossip  decentralized neighbor averaging ``x <- W^k x`` with an
+               explicit doubly-stochastic mixing matrix W over the G axis
+               (topology.py), ``k = mix_rounds`` hops per round.
+  async_stale  server averaging with bounded staleness s, simulated
+               deterministically on the G axis: in round n only groups
+               with ``(g + n) % (s + 1) == 0`` push a fresh model; the
+               server averages each group's LAST pushed model. Every
+               group's contribution is at most s rounds old; s = 0 is
+               exactly ``server``.
+  none         no communication (W = I, zero wire bytes) — the
+               disconnected baseline for ablations and parity tests.
+
+All backends preserve the G-mean (doubly-stochastic mixing / exact mean),
+so every topology optimizes the same average objective; they differ in
+consensus speed and wire bytes. Exchanges are frozen dataclasses closed
+over by the jitted round; per-round memory (codec residuals, staleness
+buffers, the round counter) lives in the train state under ``"comm"``
+(``localsgd.init_state(..., exchange=...)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import codecs as codecs_mod
+from repro.comm import topology as topo_mod
+
+TOPOLOGIES = ("server", "ring", "gossip", "async_stale", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class Exchange:
+    topology: str
+    codec: codecs_mod.Codec
+    n_groups: int
+    mix_rounds: int = 1
+    staleness: int = 0
+    # (G, G) doubly-stochastic mixing matrix; None = exact mean+broadcast
+    # (server/async) or identity (none) — those paths avoid the matmul so
+    # the default stays bit-exact with the pre-comm ``average_groups``.
+    w: Optional[np.ndarray] = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.topology}/{self.codec.name}"
+
+    @property
+    def stateful(self) -> bool:
+        if self.topology == "none":
+            return False   # no wire: the codec never runs, no state
+        return self.topology == "async_stale" or self.codec.stateful
+
+    @property
+    def supports_opt_state_averaging(self) -> bool:
+        """async_stale keeps its staleness buffer for params only, so
+        rounds must run with average_opt_state=False (the single source
+        of the rule the launchers and the localsgd guard consult)."""
+        return self.topology != "async_stale"
+
+    # -- state ------------------------------------------------------------
+
+    def init(self, params_G) -> dict:
+        """Comm state for a G-grouped params pytree/buffer ({} when the
+        exchange is stateless — the round then carries no "comm" key)."""
+        state = {}
+        if not self.stateful:
+            return state
+        if self.codec.stateful:
+            state["codec"] = self.codec.init(params_G)
+        if self.topology == "async_stale":
+            # a real COPY: the staleness buffer must not alias the live
+            # params (donated train states would double-donate the buffer)
+            state["pushed"] = jax.tree.map(jnp.copy, params_G)
+            state["round"] = jnp.zeros((), jnp.int32)
+        return state
+
+    # -- mixing -----------------------------------------------------------
+
+    def _mix_leaf(self, x):
+        if self.topology == "none":
+            return x
+        if self.w is None:  # server/async: exact mean, broadcast back —
+            # identical ops to the pre-comm average_groups (bit-exact)
+            m = jnp.mean(x, axis=0, keepdims=True)
+            return jnp.broadcast_to(m, x.shape)
+        w = jnp.asarray(self.w, jnp.float32)
+        y = x.astype(jnp.float32)
+        for _ in range(self.mix_rounds):
+            y = jnp.tensordot(w, y, axes=[[1], [0]])
+        return y.astype(x.dtype)
+
+    def mix(self, tree):
+        """Codec-free mixing over the G axis (opt-state moments follow the
+        topology at full fp32 width — see DESIGN.md §8)."""
+        return jax.tree.map(self._mix_leaf, tree)
+
+    # -- the communication step -------------------------------------------
+
+    def params(self, x_G, x0_G, comm_state: dict):
+        """One exchange of the models: ``x_G`` are the post-local-step
+        params (leading G axis), ``x0_G`` the round-start params — the
+        codec reference: lossy codecs transmit the delta ``x_G - x0_G``
+        so quantization error vanishes as rounds converge. Returns
+        ``(mixed_x_G, new_comm_state)``."""
+        new_state = dict(comm_state)
+        if self.codec.identity or self.topology == "none":
+            # "none" skips the codec too: nothing goes on the wire, so a
+            # no-comm baseline must not inject quantization noise
+            x_hat = x_G
+        else:
+            delta = jax.tree.map(lambda a, b: a - b, x_G, x0_G)
+            delta_hat, cstate = self.codec.compress(
+                delta, comm_state.get("codec", {}))
+            x_hat = jax.tree.map(lambda b, d: b + d, x0_G, delta_hat)
+            if self.codec.stateful:
+                new_state["codec"] = cstate
+        if self.topology != "async_stale":
+            return self.mix(x_hat), new_state
+        # bounded-staleness server: refresh only this round's pushers,
+        # average everyone's last push
+        rnd = comm_state["round"]
+        fresh = (jnp.arange(self.n_groups) + rnd) % (self.staleness + 1) == 0
+
+        def refresh(pushed, x):
+            keep = fresh.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.where(keep, x, pushed)
+
+        pushed = jax.tree.map(refresh, comm_state["pushed"], x_hat)
+        new_state["pushed"] = pushed
+        new_state["round"] = rnd + 1
+        return self.mix(pushed), new_state
+
+    # -- wire accounting ---------------------------------------------------
+
+    def senders_per_round(self) -> float:
+        """Point-to-point payloads one round puts on the wire. server:
+        G uplinks. ring/gossip: one payload per directed edge per mixing
+        hop. async_stale: amortized over the staleness cycle (each group
+        pushes once per s+1 rounds; exact when (s+1) divides G). Broadcast
+        downlink is topology-dependent (tree/multicast) and excluded —
+        the accounting is uplink-only, consistent across backends."""
+        if self.topology == "none":
+            return 0.0
+        if self.topology == "server":
+            return float(self.n_groups)
+        if self.topology == "async_stale":
+            return self.n_groups / (self.staleness + 1)
+        return float(topo_mod.n_edge_sends(self.w) * self.mix_rounds)
+
+    def wire_bytes_per_round(self, n_params: int,
+                             moment_elems: int = 0) -> int:
+        """Exact encoded payload bytes per round: every sender ships the
+        codec'd params buffer plus (when the round averages opt state)
+        the moment buffers at full fp32 width."""
+        per_sender = self.codec.wire_bytes(n_params) + 4 * moment_elems
+        return int(round(self.senders_per_round() * per_sender))
+
+
+def get_exchange(topology: str = "server", codec: str = "fp32",
+                 n_groups: int = 1, *, mix_rounds: int = 1,
+                 staleness: int = 1, seed: int = 0, impl: str = "auto",
+                 chunk: int = 256, topk_frac: float = 0.05) -> Exchange:
+    """Build an Exchange from names (the ``--comm`` / ``--codec`` flags)."""
+    if topology not in TOPOLOGIES:
+        raise ValueError(f"unknown topology {topology!r} "
+                         f"(have {TOPOLOGIES})")
+    if topology == "async_stale" and codec == "topk":
+        # the staleness schedule DROPS non-pushing groups' deltas by
+        # design; an error-feedback residual would instead absorb their
+        # top-k entries as "delivered" and silently lose them
+        raise NotImplementedError(
+            "async_stale + topk: error feedback assumes every round's "
+            "payload is delivered, but the staleness schedule drops "
+            "non-pushing rounds (DESIGN.md §8)")
+    c = codecs_mod.get_codec(codec, impl=impl, chunk=chunk,
+                             topk_frac=topk_frac, seed=seed)
+    w = None
+    if topology in ("ring", "gossip"):
+        w = topo_mod.mixing_matrix(topology, n_groups, seed=seed)
+    return Exchange(topology=topology, codec=c, n_groups=n_groups,
+                    mix_rounds=mix_rounds,
+                    staleness=staleness if topology == "async_stale" else 0,
+                    w=w)
+
+
+def default_exchange(n_groups: int) -> Exchange:
+    """The pre-comm behavior: star mean, uncompressed — bit-exact with
+    ``average_groups``."""
+    return get_exchange("server", "fp32", n_groups)

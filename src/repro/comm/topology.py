@@ -1,0 +1,103 @@
+"""Mixing topologies for the communication subsystem (DESIGN.md §8).
+
+The paper's server step is the star topology: every node pushes its model,
+pulls the mean. Decentralized variants replace that with one (or several)
+rounds of neighbor averaging ``x <- W x`` where ``W`` is a doubly-stochastic
+mixing matrix over the G groups: rows sum to 1 (each node's update is a
+convex combination — iterates stay in the convex hull) and columns sum to 1
+(the G-mean is invariant, so decentralized rounds optimize the same average
+objective as the server). For connected topologies the spectral gap
+``1 - |lambda_2(W)|`` is positive and repeated mixing contracts to
+consensus at rate |lambda_2|^k — the property ``tests/test_comm.py``
+checks.
+
+Matrices are built host-side with numpy (static, deterministic per seed)
+and closed over as constants by the jitted exchange.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def server_matrix(m: int) -> np.ndarray:
+    """Star topology as a mixing matrix: one step reaches exact consensus.
+
+    (The server Exchange does NOT multiply by this — it uses the same
+    mean+broadcast ops as the pre-comm ``average_groups`` so the default
+    path stays bit-exact — but the matrix form is what the consensus /
+    spectral tests reason about.)"""
+    return np.full((m, m), 1.0 / m)
+
+
+def ring_matrix(m: int) -> np.ndarray:
+    """Symmetric ring: each node averages itself with its two neighbors
+    (equal 1/3 weights; degenerate small-m cases fall back to the mean)."""
+    if m <= 2:
+        return server_matrix(m)
+    w = np.zeros((m, m))
+    for i in range(m):
+        w[i, i] = 1.0 / 3.0
+        w[i, (i - 1) % m] = 1.0 / 3.0
+        w[i, (i + 1) % m] = 1.0 / 3.0
+    return w
+
+
+def gossip_matrix(m: int, seed: int = 0) -> np.ndarray:
+    """Metropolis-Hastings weights on a random connected graph.
+
+    A ring backbone guarantees connectivity; ``m // 2`` random chords
+    (deterministic per seed) shrink the diameter. Metropolis weights
+    W_ij = 1 / (1 + max(deg_i, deg_j)) for each edge, W_ii = 1 - sum_j,
+    are symmetric and doubly stochastic for ANY undirected graph.
+    """
+    if m <= 2:
+        return server_matrix(m)
+    rng = np.random.RandomState(seed)
+    edges = {(i, (i + 1) % m) for i in range(m)}
+    edges = {(min(a, b), max(a, b)) for a, b in edges}
+    for _ in range(m // 2):
+        a, b = rng.randint(0, m, size=2)
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    deg = np.zeros(m, dtype=np.int64)
+    for a, b in edges:
+        deg[a] += 1
+        deg[b] += 1
+    w = np.zeros((m, m))
+    for a, b in edges:
+        w[a, b] = w[b, a] = 1.0 / (1.0 + max(deg[a], deg[b]))
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def mixing_matrix(name: str, m: int, seed: int = 0) -> np.ndarray:
+    if name == "server":
+        return server_matrix(m)
+    if name == "ring":
+        return ring_matrix(m)
+    if name == "gossip":
+        return gossip_matrix(m, seed=seed)
+    raise ValueError(f"unknown topology {name!r} "
+                     "(have server, ring, gossip)")
+
+
+def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-9) -> bool:
+    return (np.all(w >= -tol)
+            and np.allclose(w.sum(axis=0), 1.0, atol=tol)
+            and np.allclose(w.sum(axis=1), 1.0, atol=tol))
+
+
+def spectral_gap(w: np.ndarray) -> float:
+    """1 - |lambda_2|. Positive iff repeated mixing reaches consensus."""
+    lam = np.sort(np.abs(np.linalg.eigvals(w)))[::-1]
+    return float(1.0 - (lam[1] if len(lam) > 1 else 0.0))
+
+
+def n_edge_sends(w: np.ndarray) -> int:
+    """Point-to-point payloads one mixing round costs: each node sends its
+    buffer to every neighbor with a nonzero incoming weight (off-diagonal
+    nonzeros of W). The wire-byte accounting in exchange.py multiplies
+    this by the per-sender codec payload."""
+    off = w.copy()
+    np.fill_diagonal(off, 0.0)
+    return int(np.count_nonzero(off))

@@ -14,9 +14,16 @@ from repro.core import theory
 class AdaptiveT:
     """Adjusts the number of local steps between communication rounds.
 
-    r: cost ratio C_g / C_c (local step cost / communication cost). On the
-    production mesh this is instantiated from the dry-run roofline terms
-    (see launch/roofline.py: r = step_time_est / allreduce_time_est).
+    r: cost ratio C_g / C_c (local step cost / communication cost). Two
+    ways to instantiate it:
+
+    * roofline estimate (the fallback): r = step_time_est /
+      allreduce_time_est from the dry-run HLO terms (launch/roofline.py).
+    * measured, codec-aware: ``AdaptiveT.from_comm_bytes`` takes the EXACT
+      per-round wire bytes the round's Exchange reports
+      (``metrics["wire_bytes"]`` / ``Exchange.wire_bytes_per_round``) and
+      a link bandwidth — so switching codec (int8 cuts bytes ~4x) changes
+      r, and with it the cost-optimal T*.
     """
 
     r: float
@@ -28,6 +35,22 @@ class AdaptiveT:
 
     def __post_init__(self):
         self.history = []
+
+    @classmethod
+    def from_comm_bytes(cls, step_time_s: float, wire_bytes_per_round: float,
+                        bandwidth_bytes_per_s: float,
+                        **kw) -> "AdaptiveT":
+        """r from MEASURED communication: C_c = wire_bytes / bandwidth.
+
+        ``wire_bytes_per_round`` is the codec-aware payload the comm
+        subsystem accounts per round; ``step_time_s`` the measured (or
+        roofline) cost of one local step."""
+        comm_s = wire_bytes_per_round / bandwidth_bytes_per_s
+        if comm_s <= 0:
+            raise ValueError(f"non-positive comm time {comm_s} "
+                             "(zero wire bytes? the 'none' topology has "
+                             "no communication cost to adapt T against)")
+        return cls(r=step_time_s / comm_s, **kw)
 
     @property
     def t(self) -> int:

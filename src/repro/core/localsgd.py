@@ -8,10 +8,13 @@ Model-averaging distributed optimization:
 
 SPMD mapping (see DESIGN.md): every state leaf carries a leading group axis
 G sharded over the ("pod","data") mesh axes. Local steps are vmapped over G
-— zero cross-group collectives. ``average_groups`` (mean over G + broadcast)
-is the ONLY cross-pod/data communication and lowers to one all-reduce of the
-model per round, instead of one gradient all-reduce per step (the
-conventional baseline, also provided here as ``make_sync_step``).
+— zero cross-group collectives. The per-round model exchange is the ONLY
+cross-pod/data communication; it is routed through the pluggable
+``repro.comm.Exchange`` layer (DESIGN.md §8) — topology x codec + exact
+wire-byte accounting — and defaults to server/fp32, which is bit-exact
+with the original ``average_groups`` (mean over G + broadcast): one
+all-reduce of the model per round, instead of one gradient all-reduce per
+step (the conventional baseline, also provided here as ``make_sync_step``).
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ from typing import Any, Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import comm as comm_mod
 from repro.optim import Optimizer, map_moments, packing
 
 
@@ -59,14 +63,60 @@ def replicate(tree, n_groups: int):
 def average_groups(tree):
     """Model averaging: mean over the leading G axis, broadcast back.
 
-    This is the paper's server combination step and the ONLY cross-group
-    collective in the local round.
+    This is the paper's server combination step — kept as the reference
+    the ``comm.Exchange`` server backend must stay bit-exact with (the
+    rounds themselves route through the exchange; see DESIGN.md §8).
     """
     def avg(x):
         m = jnp.mean(x, axis=0, keepdims=True)
         return jnp.broadcast_to(m, x.shape)
 
     return jax.tree.map(avg, tree)
+
+
+def _resolve_exchange(exchange, cfg: LocalSGDConfig, layout):
+    """Default + validate the round's exchange (see DESIGN.md §8 for the
+    combinations that refuse)."""
+    exch = exchange if exchange is not None else comm_mod.default_exchange(
+        cfg.n_groups)
+    if exch.n_groups != cfg.n_groups:
+        raise ValueError(f"exchange built for G={exch.n_groups} but "
+                         f"cfg.n_groups={cfg.n_groups}")
+    if exch.codec.flat_only and layout is None and exch.topology != "none":
+        # ("none" is exempt: nothing goes on the wire, the codec never runs)
+        raise NotImplementedError(
+            f"codec {exch.codec.name!r} needs the packed (G, N) buffer as "
+            "its wire format — run the round with a packing.Layout "
+            "(DESIGN.md §8)")
+    if cfg.average_opt_state and not exch.supports_opt_state_averaging:
+        raise NotImplementedError(
+            f"{exch.topology} keeps one staleness buffer per group for "
+            "the params only; set average_opt_state=False (DESIGN.md §8)")
+    return exch
+
+
+def _check_comm_state(exch, state_G):
+    if exch.stateful and "comm" not in state_G:
+        raise ValueError(
+            f"exchange {exch.name!r} carries round-to-round state "
+            "(staleness buffers / codec residuals); build the train state "
+            "with init_state(..., exchange=...)")
+
+
+def _round_wire_bytes(exch, params_G, opt_G, avg_opt: bool,
+                      n_groups: int) -> int:
+    """Exact payload bytes this round puts on the wire (static ints —
+    shapes only), matching what the round actually exchanges: the params
+    buffer through the codec, plus — when the round averages opt state —
+    the moment buffers at fp32. The step counter is never exchanged on
+    either path (map_moments convention)."""
+    n = sum(l.size // n_groups for l in jax.tree.leaves(params_G))
+    m = 0
+    if avg_opt:
+        m = sum(l.size // n_groups
+                for k, v in opt_G.items() if k != "count"
+                for l in jax.tree.leaves(v))
+    return exch.wire_bytes_per_round(n, m)
 
 
 def grad_sq_norm(grads, use_pallas: bool = False) -> jax.Array:
@@ -98,25 +148,34 @@ def _grad_sq_norm_groups(grads_G, use_pallas: bool = False) -> jax.Array:
 
 
 def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
-                     layout: Optional[packing.Layout] = None):
+                     layout: Optional[packing.Layout] = None,
+                     exchange: Optional["comm_mod.Exchange"] = None):
     """Build ``round(state_G, batch_G) -> (state_G, metrics)``.
 
     loss_fn(params, batch) -> scalar.
-    state_G: {"params","opt"} with leading G axis on every leaf.
+    state_G: {"params","opt"} with leading G axis on every leaf, plus a
+             "comm" entry when the exchange carries state
+             (``init_state(..., exchange=...)``).
     batch_G: leaves with leading axes (G, ...) for fixed_batch or
              (G, T, ...) for microbatch mode.
 
     With ``layout`` (and a packed optimizer from ``optim.packed``) the
     round runs on the flat-buffer fast path: state_G["params"] is one
     (G, N) f32 buffer, every inner step is one fused update pass, and the
-    server averaging is a single flat mean over G (see DESIGN.md §6).
+    buffer doubles as the wire format (see DESIGN.md §6).
+
+    ``exchange`` selects the communication backend (repro.comm,
+    DESIGN.md §8): topology x codec + exact wire-byte accounting
+    (``metrics["wire_bytes"]``). Default: server/fp32 — bit-exact with
+    the pre-comm ``average_groups``.
     """
+    exch = _resolve_exchange(exchange, cfg, layout)
     if layout is not None or getattr(opt, "packed", False):
         if layout is None or not getattr(opt, "packed", False):
             raise ValueError(
                 "packed rounds need BOTH a packing.Layout and a packed "
                 "optimizer (optim.packed / optim.get(..., packed=True))")
-        return _make_packed_local_round(loss_fn, opt, cfg, layout)
+        return _make_packed_local_round(loss_fn, opt, cfg, layout, exch)
     vg = jax.value_and_grad(loss_fn)
 
     def fixed_batch_group(state, batch, t_i=None):
@@ -180,21 +239,37 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
         else microbatch_group
 
     def round_(state_G, batch_G):
+        _check_comm_state(exch, state_G)
+        comm_state = state_G.get("comm", {})
+        st = {"params": state_G["params"], "opt": state_G["opt"]}
+        # lossy codecs transmit the round delta vs these (identity codecs
+        # never touch x0, keeping the default path bit-exact)
+        x0 = None if exch.codec.identity else st["params"]
         if cfg.t_i is not None and cfg.inner_mode == "fixed_batch":
             assert len(cfg.t_i) == cfg.n_groups, cfg.t_i
             assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
             t_vec = jnp.asarray(cfg.t_i, jnp.int32)
-            state_G, metrics = jax.vmap(fixed_batch_group)(
-                state_G, batch_G, t_vec)
+            st, metrics = jax.vmap(fixed_batch_group)(st, batch_G, t_vec)
         else:
-            state_G, metrics = jax.vmap(group_fn)(state_G, batch_G)
-        # ---- communication: the paper's server averaging ------------------
-        new_params = average_groups(state_G["params"])
+            st, metrics = jax.vmap(group_fn)(st, batch_G)
+        # ---- communication: the paper's exchange, now pluggable -----------
+        new_params, comm_state = exch.params(st["params"], x0, comm_state)
         if cfg.average_opt_state:
-            new_opt = average_groups(state_G["opt"])
+            # moment buffers follow the topology; the step counter is
+            # never exchanged (map_moments convention, same as the packed
+            # path) — mixing an int32 counter through a float matmul
+            # would truncate and drift it across groups, and under t_i
+            # the per-group counts are meaningful
+            new_opt = map_moments(exch.mix, st["opt"])
         else:
-            new_opt = state_G["opt"]
-        return {"params": new_params, "opt": new_opt}, metrics
+            new_opt = st["opt"]
+        metrics["wire_bytes"] = _round_wire_bytes(
+            exch, st["params"], st["opt"], cfg.average_opt_state,
+            cfg.n_groups)
+        out = {"params": new_params, "opt": new_opt}
+        if "comm" in state_G:
+            out["comm"] = comm_state
+        return out, metrics
 
     return round_
 
@@ -204,14 +279,9 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
 # ---------------------------------------------------------------------------
 
 
-def _avg_opt_flat(opt_state):
-    """Average the (G, N) moment buffers over G; the scalar step counter is
-    shared by construction on the packed path and stays untouched."""
-    return map_moments(average_groups, opt_state)
-
-
 def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
-                             cfg: LocalSGDConfig, layout: packing.Layout):
+                             cfg: LocalSGDConfig, layout: packing.Layout,
+                             exch: "comm_mod.Exchange"):
     """Flat-buffer local round (see DESIGN.md §6).
 
     The T-step inner loop scans over fused whole-buffer updates: grads are
@@ -252,6 +322,13 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
         assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
 
     def round_(state_G, batch_G):
+        _check_comm_state(exch, state_G)
+        had_comm = "comm" in state_G
+        comm_state = state_G.get("comm", {})
+        state_G = {"params": state_G["params"], "opt": state_G["opt"]}
+        # lossy codecs transmit the round delta vs these (identity codecs
+        # never touch x0, keeping the default path bit-exact + donatable)
+        x0 = None if exch.codec.identity else state_G["params"]
         t_vec = (jnp.asarray(cfg.t_i, jnp.int32)
                  if cfg.t_i is not None else None)
 
@@ -318,13 +395,22 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
             metrics = {"loss": loss_G,
                        "inner_steps": n_steps,
                        "grad_sq": gsq_G}
-        # ---- communication: ONE flat mean over G ------------------------
-        new_params = average_groups(state_G["params"])
+        # ---- communication: ONE flat buffer through the exchange --------
+        new_params, comm_state = exch.params(state_G["params"], x0,
+                                             comm_state)
         if cfg.average_opt_state:
-            new_opt = _avg_opt_flat(state_G["opt"])
+            # moment buffers follow the topology at fp32; the shared step
+            # counter stays untouched (map_moments convention)
+            new_opt = map_moments(exch.mix, state_G["opt"])
         else:
             new_opt = state_G["opt"]
-        return {"params": new_params, "opt": new_opt}, metrics
+        metrics["wire_bytes"] = _round_wire_bytes(
+            exch, state_G["params"], state_G["opt"],
+            cfg.average_opt_state, cfg.n_groups)
+        out = {"params": new_params, "opt": new_opt}
+        if had_comm:
+            out["comm"] = comm_state
+        return out, metrics
 
     return round_
 
@@ -379,7 +465,8 @@ def make_sync_step(loss_fn: Callable, opt: Optimizer,
 
 
 def init_state(params, opt: Optimizer, n_groups: Optional[int] = None,
-               layout: Optional[packing.Layout] = None):
+               layout: Optional[packing.Layout] = None,
+               exchange: Optional["comm_mod.Exchange"] = None):
     if layout is not None:
         buf = packing.pack(params, layout)
         state = {"params": buf, "opt": opt.init(buf)}
@@ -389,10 +476,15 @@ def init_state(params, opt: Optimizer, n_groups: Optional[int] = None,
 
             state = {"params": rep(buf),
                      "opt": map_moments(rep, state["opt"])}
-        return state
-    state = {"params": params, "opt": opt.init(params)}
-    if n_groups:
-        state = replicate(state, n_groups)
+    else:
+        state = {"params": params, "opt": opt.init(params)}
+        if n_groups:
+            state = replicate(state, n_groups)
+    if exchange is not None and exchange.stateful:
+        if not n_groups:
+            raise ValueError("stateful exchanges need a grouped state "
+                             "(pass n_groups)")
+        state["comm"] = exchange.init(state["params"])
     return state
 
 

@@ -11,6 +11,16 @@ def use_interpret() -> bool:
     return _jax.default_backend() != "tpu"
 
 
+def resolve_impl(impl: str) -> str:
+    """Shared impl="auto" resolution for everything that fronts a Pallas
+    kernel with a jnp fallback (packed optimizers, comm codecs): "jnp"
+    everywhere except a real TPU backend."""
+    if impl == "auto":
+        return "jnp" if use_interpret() else "pallas"
+    assert impl in ("pallas", "jnp"), impl
+    return impl
+
+
 def pad_to_block(block: int, *xs):
     """Shared 1-D blocking prep for the flat-buffer kernels: clamp the
     block to n, zero-pad every array to a block multiple.

@@ -16,6 +16,7 @@ from repro.kernels import fused_adamw as _ad
 from repro.kernels import fused_momentum as _mo
 from repro.kernels import fused_sgd as _sg
 from repro.kernels import mamba_scan as _ms
+from repro.kernels import quantize as _qz
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import sq_norm as _sq
 from repro.kernels import use_interpret
@@ -76,3 +77,17 @@ def sq_norm_groups(x):
 @jax.jit
 def mamba_chunk(xh, bmat, cmat, dt, a):
     return _ms.mamba_chunk(xh, bmat, cmat, dt, a, interpret=use_interpret())
+
+
+# Comm-codec kernels (repro.comm, DESIGN.md §8): per-chunk int8
+# quantize/dequantize of the packed model buffer before exchange.
+
+
+@jax.jit
+def quantize_int8(x, u):
+    return _qz.quantize_int8(x, u, interpret=use_interpret())
+
+
+@jax.jit
+def dequantize_int8(q, scales):
+    return _qz.dequantize_int8(q, scales, interpret=use_interpret())

@@ -1,0 +1,74 @@
+"""Int8 per-chunk quantize/dequantize Pallas kernels (comm codecs).
+
+The communication subsystem (repro.comm, DESIGN.md §8) compresses the
+packed (G, N) model buffer before exchange. The int8 codec quantizes each
+``chunk``-element slice with its own fp32 scale ``max|x| / 127`` and
+unbiased stochastic rounding; the wire payload is 1 byte/element plus one
+scale per chunk (~3.9x under fp32 at chunk=256).
+
+Layout contract: callers reshape the flat buffer to ``(rows, chunk)``
+(``optim.packing.chunk_rows``) — one grid row per chunk, so the scale
+reduction, the rounding, and the cast are a single VMEM pass per chunk.
+Stochastic-rounding noise ``u`` (uniform [0,1)) is generated OUTSIDE with
+``jax.random`` and passed in: the kernel stays deterministic given its
+inputs, and the jnp reference path (codecs.py) consumes the same bits so
+the two impls agree exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, u_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+    # unbiased stochastic rounding: E[floor(v + u)] = v for u ~ U[0,1)
+    q = jnp.floor(x / scale + u_ref[...].astype(jnp.float32))
+    q_ref[...] = jnp.clip(q, -127.0, 127.0).astype(jnp.int8)
+    s_ref[...] = jnp.full_like(s_ref, scale)
+
+
+def quantize_int8(x, u, *, interpret: bool = True):
+    """(rows, chunk) f32 + uniform noise -> (q int8 (rows, chunk),
+    scales f32 (rows, 1)); one scale per row."""
+    rows, chunk = x.shape
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((rows, chunk), jnp.int8),
+            jax.ShapeDtypeStruct((rows, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, u)
+
+
+def _dequantize_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def dequantize_int8(q, scales, *, interpret: bool = True):
+    """(rows, chunk) int8 + (rows, 1) scales -> (rows, chunk) f32."""
+    rows, chunk = q.shape
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, chunk), jnp.float32),
+        interpret=interpret,
+    )(q, scales)

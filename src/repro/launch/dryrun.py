@@ -68,7 +68,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             moe_impl: str = "", save_hlo: bool = False,
             policy: str = "tp", fsdp: int = 1, param_dtype: str = "",
             schedule: str = "rect", embed_impl: str = "",
-            packed: bool = False) -> dict:
+            packed: bool = False, comm: str = "server",
+            codec: str = "fp32", mix_rounds: int = 1,
+            staleness: int = 1) -> dict:
     import dataclasses as _dc
 
     import jax
@@ -88,7 +90,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
     kw = {}
     if shape.kind == "train":
         kw = {"mode": mode, "t_inner": t_inner, "opt_name": opt_name,
-              "policy": policy, "schedule": schedule, "packed": packed}
+              "policy": policy, "schedule": schedule, "packed": packed,
+              "comm": comm, "codec": codec, "mix_rounds": mix_rounds,
+              "staleness": staleness}
         if moe_impl:
             kw["moe_impl"] = moe_impl
     elif shape.kind == "prefill":
@@ -222,6 +226,17 @@ def main() -> None:
     ap.add_argument("--packed", action="store_true",
                     help="flat-buffer train round (DESIGN.md §6): records "
                          "the packed engine's memory/collective profile")
+    ap.add_argument("--comm", default="server",
+                    choices=["server", "ring", "gossip", "async_stale",
+                             "none"],
+                    help="exchange topology (repro.comm, DESIGN.md §8)")
+    ap.add_argument("--codec", default="fp32",
+                    choices=["fp32", "fp16", "bf16", "int8", "topk"],
+                    help="wire codec; int8/topk need --packed")
+    ap.add_argument("--mix-rounds", type=int, default=1,
+                    help="mixing hops per round (ring/gossip)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="bounded staleness s (async_stale)")
     ap.add_argument("--moe-impl", default="")
     ap.add_argument("--save-hlo", action="store_true")
     # §Perf hillclimb knobs ---------------------------------------------
@@ -244,6 +259,14 @@ def main() -> None:
             extra += ["--opt", args.opt]
         if args.moe_impl:
             extra += ["--moe-impl", args.moe_impl]
+        if args.comm != "server":
+            extra += ["--comm", args.comm]
+        if args.codec != "fp32":
+            extra += ["--codec", args.codec]
+        if args.mix_rounds != 1:
+            extra += ["--mix-rounds", str(args.mix_rounds)]
+        if args.staleness != 1:
+            extra += ["--staleness", str(args.staleness)]
         sys.exit(1 if drive_all(args.multi_pod, args.tag, args.force,
                                 extra) else 0)
 
@@ -255,7 +278,8 @@ def main() -> None:
                       save_hlo=args.save_hlo, policy=args.policy,
                       fsdp=args.fsdp, param_dtype=args.param_dtype,
                       schedule=args.schedule, embed_impl=args.embed_impl,
-                      packed=args.packed)
+                      packed=args.packed, comm=args.comm, codec=args.codec,
+                      mix_rounds=args.mix_rounds, staleness=args.staleness)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

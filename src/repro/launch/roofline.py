@@ -31,6 +31,17 @@ HBM_CAP = 16e9             # v5e HBM per chip
 DRYRUN_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 
+def comm_round_seconds(wire_bytes: float, bandwidth: float = ICI_BW) -> float:
+    """Seconds one exchange round's payload spends on the slow link.
+
+    ``wire_bytes`` is the EXACT codec-aware payload the comm subsystem
+    reports (``Exchange.wire_bytes_per_round`` / round
+    ``metrics["wire_bytes"]``). Feeds ``AdaptiveT.from_comm_bytes`` — the
+    measured replacement for the HLO all-reduce estimate this module
+    otherwise derives r from."""
+    return wire_bytes / bandwidth
+
+
 def model_flops(arch: str, shape_name: str, meta: Dict) -> float:
     """Global useful FLOPs for the step: 6*N(_active)*D training tokens
     (incl. the local T_i inner steps), 2*N*D for forward-only steps."""

@@ -15,8 +15,10 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import comm as comm_mod
 from repro import optim
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import localsgd as lsgd
@@ -137,7 +139,9 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      *, t_inner: int = 4, opt_name: str = "sgd",
                      lr: float = 1e-3, mode: str = "localsgd",
                      schedule: str = "rect", moe_impl: Optional[str] = None,
-                     policy: str = "tp", packed: bool = False) -> BuiltStep:
+                     policy: str = "tp", packed: bool = False,
+                     comm: str = "server", codec: str = "fp32",
+                     mix_rounds: int = 1, staleness: int = 1) -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
     on an fsdp mesh (params additionally sharded over "fsdp").
@@ -145,7 +149,17 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     packed=True runs the round on the flat-buffer fast path (DESIGN.md
     §6): state leaves are single (G, N) f32 buffers sharded over the G
     axis only (params replicated within a group, like policy="dp"), every
-    inner step is one fused update pass, and the state args are donated."""
+    inner step is one fused update pass, and the state args are donated.
+
+    comm/codec select the exchange backend (repro.comm, DESIGN.md §8) for
+    local-SGD rounds. Flat-only codecs (int8/topk) need packed=True; comm
+    state (codec residuals, staleness buffers) rides in the train state
+    and shares its shardings."""
+    if mode == "sync" and (comm != "server" or codec != "fp32"):
+        raise ValueError(
+            "comm/codec select the local-SGD model exchange; sync-DP "
+            "all-reduces gradients every step and has no exchange — "
+            "drop the flags or use mode='localsgd'")
     if moe_impl:
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     model = build_model(cfg, schedule=schedule)
@@ -167,7 +181,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                 "yet (the flat buffer is replicated within a group); drop "
                 "--packed or the policy/fsdp flags")
         return _build_packed_train_step(cfg, shape, mesh, model, opt_name,
-                                        lr, mode, t_inner)
+                                        lr, mode, t_inner, comm, codec,
+                                        mix_rounds, staleness)
     opt = optim.get(opt_name, lr)
     dp = sh.dp_axes(mesh)
     pspecs = sh.resolve_specs(model.defs, mesh, policy=policy)
@@ -193,9 +208,13 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     G = sh.n_groups(mesh)
     assert shape.global_batch % G == 0, (shape.global_batch, G)
     b = shape.global_batch // G
+    exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
+                                        staleness)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
-                               inner_mode="fixed_batch")
-    round_ = lsgd.make_local_round(model.loss, opt, lcfg)
+                               inner_mode="fixed_batch",
+                               average_opt_state=avg_opt)
+    round_ = lsgd.make_local_round(model.loss, opt, lcfg,
+                                   exchange=exchange)
 
     params_G = jax.tree.map(lambda s: SDS((G,) + s.shape, s.dtype),
                             params_abs)
@@ -206,6 +225,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     ospecs_G = _opt_specs(opt_G, pspecs_G, group=dp)
     state_abs = {"params": params_G, "opt": opt_G}
     sspecs = {"params": pspecs_G, "opt": ospecs_G}
+    _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
+                    param_specs=pspecs_G)
     inner_axis = None
     if policy == "dp":
         inner_axis = "model"
@@ -214,6 +235,14 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     batch_abs, bspecs = batch_abstract(cfg, (G, b), shape.seq_len, mesh,
                                        leading_group=True,
                                        inner_axis=inner_axis)
+    def _n(tree):
+        return sum(int(np.prod(s.shape)) if s.shape else 1
+                   for s in jax.tree.leaves(tree))
+
+    # moment accounting mirrors the round's _round_wire_bytes: moment
+    # buffers ride at fp32; the step counter is never exchanged
+    moment_elems = _n({k: v for k, v in opt_1.items()
+                       if k != "count"}) if avg_opt else 0
     return BuiltStep(
         round_, (state_abs, batch_abs),
         (_ns(mesh, sspecs), _ns(mesh, bspecs)),
@@ -221,12 +250,54 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         {"mode": "localsgd", "groups": G, "per_group": b,
          "tokens": shape.global_batch * shape.seq_len * t_inner,
          "t_inner": t_inner, "policy": policy,
-         "param_dtype": cfg.param_dtype})
+         "param_dtype": cfg.param_dtype, "comm": exchange.name,
+         "wire_bytes_per_round": exchange.wire_bytes_per_round(
+             _n(params_abs), moment_elems)})
+
+
+def _build_exchange(comm: str, codec: str, n_groups: int,
+                    mix_rounds: int = 1, staleness: int = 1):
+    """Exchange for a mesh step builder. The codec impl is pinned to
+    "jnp" for the same reason the packed optimizers pin it (DESIGN.md §6):
+    a pallas_call over the G-sharded buffer is not GSPMD-partitionable.
+    Returns (exchange, average_opt_state) — async_stale keeps staleness
+    buffers for params only, so it turns opt-state averaging off."""
+    exchange = comm_mod.get_exchange(comm, codec, n_groups, impl="jnp",
+                                     mix_rounds=mix_rounds,
+                                     staleness=staleness)
+    return exchange, exchange.supports_opt_state_averaging
+
+
+def _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
+                    param_specs):
+    """Thread stateful-exchange memory (codec residuals, staleness
+    buffers, counters) into the abstract state + shardings. The
+    ``pushed`` staleness buffer mirrors the params, so it takes the
+    params' OWN specs (keeping TP/fsdp sharding — a lead-only spec would
+    replicate the whole per-group model and reshard every round); other
+    G-leading leaves shard on the group axis, scalars replicate."""
+    if not exchange.stateful:
+        return
+    comm_abs = jax.eval_shape(exchange.init, params_G)
+    lead = P(dp) if dp else P()
+
+    def spec(s):
+        if s.ndim >= 1 and s.shape[0] == G:
+            return P(*(tuple(lead) + (None,) * (s.ndim - 1)))
+        return P(*((None,) * s.ndim))
+
+    cspecs = {k: (param_specs if k == "pushed"
+                  else jax.tree.map(spec, v))
+              for k, v in comm_abs.items()}
+    state_abs["comm"] = comm_abs
+    sspecs["comm"] = cspecs
 
 
 def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                              model, opt_name: str, lr: float, mode: str,
-                             t_inner: int) -> BuiltStep:
+                             t_inner: int, comm: str = "server",
+                             codec: str = "fp32", mix_rounds: int = 1,
+                             staleness: int = 1) -> BuiltStep:
     """Flat-buffer train step (DESIGN.md §6): one (G, N) f32 buffer per
     state part, sharded over the G axis only — within a group the buffer
     is replicated (TP-sharded packing is future work). State is donated so
@@ -260,9 +331,13 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     G = sh.n_groups(mesh)
     assert shape.global_batch % G == 0, (shape.global_batch, G)
     b = shape.global_batch // G
+    exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
+                                        staleness)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
-                               inner_mode="fixed_batch")
-    round_ = lsgd.make_local_round(model.loss, opt, lcfg, layout=layout)
+                               inner_mode="fixed_batch",
+                               average_opt_state=avg_opt)
+    round_ = lsgd.make_local_round(model.loss, opt, lcfg, layout=layout,
+                                   exchange=exchange)
     dp = sh.dp_axes(mesh)
     buf_G = layout.abstract((G,))
     opt_abs = jax.eval_shape(opt.init, buf_G)
@@ -270,6 +345,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     lead = P(dp) if dp else P()
     sspecs = {"params": lead,
               "opt": {k: (P() if k == "count" else lead) for k in opt_abs}}
+    _add_comm_state(exchange, buf_G, state_abs, sspecs, dp, G,
+                    param_specs=lead)
     batch_abs, bspecs = batch_abstract(cfg, (G, b), shape.seq_len, mesh,
                                        leading_group=True)
     return BuiltStep(
@@ -279,7 +356,13 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         {"mode": "localsgd", "groups": G, "per_group": b,
          "tokens": shape.global_batch * shape.seq_len * t_inner,
          "t_inner": t_inner, "policy": "packed", "packed": True,
-         "n_flat": layout.size, "param_dtype": cfg.param_dtype},
+         "n_flat": layout.size, "param_dtype": cfg.param_dtype,
+         "comm": exchange.name,
+         # packed rounds exchange the moment buffers but never the
+         # shared step counter (mirrors _round_wire_bytes)
+         "wire_bytes_per_round": exchange.wire_bytes_per_round(
+             layout.size,
+             (len(opt_abs) - 1) * layout.size if avg_opt else 0)},
         donate_argnums=(0,))
 
 

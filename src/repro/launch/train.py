@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import comm as comm_mod
 from repro import optim
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import get_config
@@ -63,11 +64,29 @@ def main() -> None:
     ap.add_argument("--packed", action="store_true",
                     help="flat-buffer fast path: fused whole-model updates"
                          " on one (G, N) f32 buffer (see DESIGN.md)")
+    ap.add_argument("--comm", default="server",
+                    choices=["server", "ring", "gossip", "async_stale",
+                             "none"],
+                    help="exchange topology (repro.comm, DESIGN.md §8)")
+    ap.add_argument("--codec", default="fp32",
+                    choices=["fp32", "fp16", "bf16", "int8", "topk"],
+                    help="wire codec for the model exchange; int8/topk "
+                         "need --packed (the flat buffer is the wire "
+                         "format)")
+    ap.add_argument("--mix-rounds", type=int, default=1,
+                    help="mixing hops per round (ring/gossip)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="bounded staleness s (async_stale)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
+    if args.mode == "sync" and (args.comm != "server"
+                                or args.codec != "fp32"):
+        ap.error("--comm/--codec select the local-SGD model exchange; "
+                 "sync-DP all-reduces gradients every step and has no "
+                 "exchange to configure")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -109,16 +128,25 @@ def main() -> None:
         # the packed hot path skips per-step metric trajectories unless
         # the adaptive-T controller needs them
         metrics = "traj" if args.adaptive_t else "final"
+        exchange = comm_mod.get_exchange(
+            args.comm, args.codec, G, mix_rounds=args.mix_rounds,
+            staleness=args.staleness)
+        # e.g. async_stale keeps staleness buffers for the params only
+        avg_opt = exchange.supports_opt_state_averaging
         lcfg = lsgd.LocalSGDConfig(
             n_groups=G, inner_steps=t_inner, t_i=t_i,
-            threshold=args.threshold, max_inner=500, metrics=metrics)
+            threshold=args.threshold, max_inner=500, metrics=metrics,
+            average_opt_state=avg_opt)
         rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg,
-                                            layout=layout),
+                                            layout=layout,
+                                            exchange=exchange),
                       donate_argnums=(0,))
-        state = lsgd.init_state(params, opt, n_groups=G, layout=layout)
+        state = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                                exchange=exchange)
         batches = pipe.batches((G, args.per_group))
         ctl = AdaptiveT(r=args.cost_ratio) if args.adaptive_t else None
         t_cur = args.t_inner
+        wire_total = 0
         for n in range(args.rounds):
             batch = add_modalities(
                 {"tokens": jnp.asarray(next(batches)["tokens"])}, cfg, rng)
@@ -126,18 +154,23 @@ def main() -> None:
             if ctl is not None and t_cur != lcfg.inner_steps:
                 lcfg = lsgd.LocalSGDConfig(
                     n_groups=G, inner_steps=t_cur, max_inner=500,
-                    metrics=metrics)
+                    metrics=metrics, average_opt_state=avg_opt)
                 rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg,
-                                                    layout=layout),
+                                                    layout=layout,
+                                                    exchange=exchange),
                               donate_argnums=(0,))
             state, m = rnd(state, batch)
             if ctl is not None and "grad_sq_traj" in m:
                 t_cur = ctl.update(np.asarray(m["grad_sq_traj"])[0])
+            wire_total += int(m["wire_bytes"])
             if n % args.log_every == 0:
                 print(f"round {n:4d} loss {float(jnp.mean(m['loss'])):.4f} "
                       f"gsq {float(jnp.mean(m['grad_sq'])):.3e} "
                       f"T {int(jnp.max(m['inner_steps']))} "
+                      f"wire {int(m['wire_bytes']):,}B "
                       f"({time.time() - t0:.2f}s)")
+        print(f"comm {exchange.name}: {wire_total:,} wire bytes over "
+              f"{args.rounds} rounds")
         final = lsgd.server_params(state, layout=layout)
 
     if args.checkpoint:

@@ -104,11 +104,8 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 
 
 def _resolve_impl(impl: str) -> str:
-    if impl == "auto":
-        from repro.kernels import use_interpret
-        return "jnp" if use_interpret() else "pallas"
-    assert impl in ("pallas", "jnp"), impl
-    return impl
+    from repro.kernels import resolve_impl
+    return resolve_impl(impl)
 
 
 def map_moments(f, opt_state):

@@ -84,6 +84,27 @@ def unpack(buf: jax.Array, layout: Layout):
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
+def chunk_rows(x: jax.Array, chunk: int) -> jax.Array:
+    """(..., N) buffer -> (rows, chunk) 2-D view for per-chunk codecs.
+
+    The flat buffer doubles as the WIRE format (repro.comm, DESIGN.md §8):
+    codecs that carry per-chunk metadata (int8 scales) see the buffer as
+    rows of ``chunk`` f32 elements, zero-padded to a chunk multiple —
+    zeros quantize to zero, so padding never leaks into the payload."""
+    n = x.shape[-1]
+    pad = (-n) % chunk
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(-1, chunk)
+
+
+def unchunk_rows(rows: jax.Array, shape) -> jax.Array:
+    """Invert ``chunk_rows``: (rows, chunk) back to the ``shape`` buffer
+    (the zero padding on the last axis is sliced off)."""
+    lead = tuple(shape[:-1])
+    return rows.reshape(lead + (-1,))[..., :shape[-1]]
+
+
 def value_and_flat_grad(loss_fn, layout: Layout):
     """``vg(buf, batch) -> (loss, flat_grad)`` for a pytree loss.
 

@@ -1,0 +1,468 @@
+"""Communication subsystem (repro.comm): topologies, codecs, exchanges.
+
+Acceptance-critical invariants (ISSUE 2 / DESIGN.md §8):
+  * mixing matrices are doubly stochastic with positive spectral gap, and
+    repeated mixing contracts to the G-mean (consensus),
+  * the server backend with the fp32 codec is BIT-EXACT with the
+    pre-refactor ``average_groups`` on both pytree and packed rounds,
+  * int8/topk codecs round-trip within their scale tolerance; the Pallas
+    quantize kernels agree with the jnp reference on the same rounding
+    bits,
+  * error-feedback residuals account exactly: what top-k drops this round
+    is re-offered next round (zero drift),
+  * every backend preserves the G-mean, wire bytes are exact, and the
+    unsupported combinations refuse instead of silently degrading.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import comm, optim
+from repro.core import localsgd as lsgd
+from repro.kernels.quantize import dequantize_int8, quantize_int8
+from repro.optim import packing
+
+G = 4
+
+
+def quad_loss(params, batch):
+    r = batch["A"] @ params["w"] - batch["b"]
+    return 0.5 * jnp.sum(r ** 2) + 0.1 * jnp.sum(params["u"] ** 2)
+
+
+def make_problem(key, g=G, r=4, d=6):
+    ks = jax.random.split(key, 4)
+    A = jax.random.normal(ks[0], (g, r, d)) / np.sqrt(d)
+    w_star = jax.random.normal(ks[1], (d,))
+    batch = {"A": A, "b": jnp.einsum("grd,d->gr", A, w_star)}
+    params = {"w": jax.random.normal(ks[2], (d,)),
+              "u": jax.random.normal(ks[3], (2, 3))}
+    return params, batch
+
+
+# ---------------------------------------------------------------------------
+# topologies: doubly stochastic, spectral gap, consensus
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["server", "ring", "gossip"])
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 7, 16])
+def test_mixing_matrix_doubly_stochastic(name, m):
+    w = comm.mixing_matrix(name, m, seed=3)
+    assert w.shape == (m, m)
+    assert comm.is_doubly_stochastic(w)
+
+
+@pytest.mark.parametrize("name", ["server", "ring", "gossip"])
+@pytest.mark.parametrize("m", [3, 5, 8])
+def test_mixing_converges_to_consensus(name, m):
+    """spectral gap > 0 => W^k x -> mean(x) at rate (1 - gap)^k."""
+    w = comm.mixing_matrix(name, m, seed=1)
+    gap = comm.spectral_gap(w)
+    assert gap > 0.0, (name, m, gap)
+    rng = np.random.RandomState(0)
+    x = rng.randn(m, 5)
+    y = x.copy()
+    k = 80
+    for _ in range(k):
+        y = w @ y
+    err = np.abs(y - x.mean(axis=0)).max()
+    assert err <= (1.0 - gap) ** k * np.abs(x).max() * m + 1e-9, \
+        (name, m, err)
+
+
+def test_gossip_deterministic_per_seed():
+    a = comm.gossip_matrix(8, seed=5)
+    b = comm.gossip_matrix(8, seed=5)
+    c = comm.gossip_matrix(8, seed=6)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_server_matrix_one_step_consensus():
+    w = comm.server_matrix(5)
+    x = np.arange(15.0).reshape(5, 3)
+    np.testing.assert_allclose(w @ x, np.broadcast_to(x.mean(0), (5, 3)))
+
+
+# ---------------------------------------------------------------------------
+# codecs: round-trips, error feedback, wire bytes
+# ---------------------------------------------------------------------------
+
+
+def test_cast_codec_roundtrip(key):
+    x = jax.random.normal(key, (G, 100))
+    for name, tol in (("fp16", 1e-3), ("bf16", 1e-2)):
+        c = comm.get_codec(name)
+        out, state = c.compress(x, {})
+        assert state == {}
+        np.testing.assert_allclose(out, x, rtol=tol, atol=tol)
+        assert c.wire_bytes(100) == 200
+
+
+def test_int8_roundtrip_within_chunk_scale(key):
+    """Stochastic rounding moves each element by at most one quantization
+    step (the chunk's scale); padding chunks never leak."""
+    chunk = 64
+    c = comm.get_codec("int8", chunk=chunk, impl="jnp")
+    x = jax.random.normal(key, (G, 150)) * 3.0      # 150: ragged chunks
+    out, state = c.compress(x, c.init(x))
+    assert int(state["count"]) == 1
+    rows = packing.chunk_rows(x, chunk)
+    scales = jnp.max(jnp.abs(rows), axis=-1, keepdims=True) / 127.0
+    err = jnp.abs(packing.chunk_rows(out, chunk) - rows)
+    assert bool(jnp.all(err <= scales + 1e-7))
+    # payload: 1 byte/elem + one fp32 scale per chunk
+    assert c.wire_bytes(150) == 150 + 4 * 3
+
+
+def test_int8_deterministic_and_unbiased(key):
+    c = comm.get_codec("int8", impl="jnp")
+    x = jax.random.normal(key, (2, 4096))
+    out1, _ = c.compress(x, c.init(x))
+    out2, _ = c.compress(x, c.init(x))
+    np.testing.assert_array_equal(out1, out2)     # same counter, same bits
+    # different counter -> different bits, but zero-mean error
+    out3, _ = c.compress(x, {"count": jnp.asarray(7, jnp.int32)})
+    assert not np.array_equal(out1, out3)
+    assert abs(float(jnp.mean(out1 - x))) < 1e-3
+
+
+def test_int8_pallas_matches_jnp(key):
+    """Both impls consume the same rounding bits -> identical output."""
+    cj = comm.get_codec("int8", impl="jnp")
+    cp = comm.get_codec("int8", impl="pallas")
+    x = jax.random.normal(key, (G, 300))
+    oj, _ = cj.compress(x, cj.init(x))
+    op, _ = cp.compress(x, cp.init(x))
+    np.testing.assert_allclose(op, oj, atol=1e-7)
+
+
+@pytest.mark.parametrize("rows,chunk", [(1, 64), (6, 256), (13, 128)])
+def test_quantize_kernels_vs_oracle(rows, chunk, key):
+    """kernels/quantize.py vs the jnp math on the same noise."""
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (rows, chunk)) * 2.0
+    u = jax.random.uniform(ks[1], (rows, chunk))
+    q, scales = quantize_int8(x, u, interpret=True)
+    assert q.dtype == jnp.int8 and scales.shape == (rows, 1)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    want_s = jnp.where(amax > 0, amax / 127.0, 1.0)
+    np.testing.assert_allclose(scales, want_s, rtol=1e-6)
+    want_q = jnp.clip(jnp.floor(x / want_s + u), -127, 127)
+    np.testing.assert_array_equal(q, want_q.astype(jnp.int8))
+    out = dequantize_int8(q, scales, interpret=True)
+    np.testing.assert_allclose(out, q.astype(jnp.float32) * scales,
+                               rtol=1e-6)
+
+
+def test_quantize_kernel_zero_chunk():
+    """An all-zero chunk must quantize to zeros (scale guard)."""
+    x = jnp.zeros((2, 64))
+    u = jnp.full((2, 64), 0.5)
+    q, s = quantize_int8(x, u, interpret=True)
+    np.testing.assert_array_equal(q, jnp.zeros((2, 64), jnp.int8))
+    np.testing.assert_array_equal(s, jnp.ones((2, 1)))
+
+
+def test_topk_error_feedback_zero_drift(key):
+    """delta + residual_in == delta_hat + residual_out EXACTLY: what the
+    wire drops this round is carried, not lost."""
+    c = comm.get_codec("topk", topk_frac=0.25)
+    x = jax.random.normal(key, (G, 40))
+    state = c.init(x)
+    for i in range(4):
+        delta = jnp.roll(x, i, axis=-1) * (i + 1)
+        e_in = state["residual"]
+        out, state = c.compress(delta, state)
+        # the per-round accounting identity is EXACT: the residual update
+        # is the same subtraction that defines what the wire dropped
+        np.testing.assert_array_equal(delta + e_in,
+                                      out + state["residual"])
+        # at most k entries per row on the wire
+        k = max(1, round(0.25 * 40))
+        assert int(jnp.max(jnp.sum(out != 0.0, axis=-1))) <= k
+    assert c.wire_bytes(40) == 8 * 10
+
+
+# ---------------------------------------------------------------------------
+# exchanges: parity, mean preservation, staleness, wire bytes
+# ---------------------------------------------------------------------------
+
+
+def test_server_fp32_bit_exact_with_average_groups_pytree(key):
+    """The acceptance parity: the refactored round (server/fp32 through
+    comm.Exchange) is BIT-EXACT with averaging the ungrouped round's
+    locals via the pre-refactor average_groups. Eager execution: op-by-op
+    identical arithmetic."""
+    params, batch = make_problem(key)
+    opt = optim.momentum(0.05)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=3)
+    # "none" topology = the local steps with NO communication
+    rnd_none = lsgd.make_local_round(
+        quad_loss, opt, cfg, exchange=comm.get_exchange("none", "fp32", G))
+    rnd_server = lsgd.make_local_round(
+        quad_loss, opt, cfg,
+        exchange=comm.get_exchange("server", "fp32", G))
+    st = lsgd.init_state(params, opt, n_groups=G)
+    locals_, _ = rnd_none(jax.tree.map(jnp.copy, st), batch)
+    got, _ = rnd_server(st, batch)
+    want_p = lsgd.average_groups(locals_["params"])
+    want_o = lsgd.average_groups(locals_["opt"])
+    for a, b in zip(jax.tree.leaves(got["params"]),
+                    jax.tree.leaves(want_p)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(jax.tree.leaves(got["opt"]), jax.tree.leaves(want_o)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_server_fp32_bit_exact_with_average_groups_packed(key):
+    params, batch = make_problem(key)
+    layout = packing.layout_of(params)
+    opt = optim.packed("momentum", 0.05, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=3)
+    rnd_none = lsgd.make_local_round(
+        quad_loss, opt, cfg, layout=layout,
+        exchange=comm.get_exchange("none", "fp32", G))
+    rnd_server = lsgd.make_local_round(quad_loss, opt, cfg, layout=layout)
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout)
+    locals_, _ = rnd_none(jax.tree.map(jnp.copy, st), batch)
+    got, _ = rnd_server(st, batch)
+    np.testing.assert_array_equal(
+        got["params"], lsgd.average_groups(locals_["params"]))
+    np.testing.assert_array_equal(
+        got["opt"]["mu"], lsgd.average_groups(locals_["opt"]["mu"]))
+    np.testing.assert_array_equal(got["opt"]["count"],
+                                  locals_["opt"]["count"])
+
+
+@pytest.mark.parametrize("topology", ["ring", "gossip"])
+def test_decentralized_exchange_preserves_mean(topology, key):
+    """Doubly-stochastic mixing keeps the G-mean invariant: decentralized
+    rounds optimize the same average objective as the server."""
+    ex = comm.get_exchange(topology, "fp32", G, mix_rounds=2)
+    x = jax.random.normal(key, (G, 37))
+    mixed, state = ex.params(x, None, {})
+    assert state == {}
+    np.testing.assert_allclose(jnp.mean(mixed, 0), jnp.mean(x, 0),
+                               rtol=1e-5, atol=1e-6)
+    # groups do NOT reach exact consensus in one ring hop...
+    assert float(jnp.abs(mixed - jnp.mean(x, 0)).max()) > 1e-3
+    # ...but many hops contract toward it
+    ex_k = dataclasses.replace(ex, mix_rounds=60)
+    near, _ = ex_k.params(x, None, {})
+    assert float(jnp.abs(near - jnp.mean(x, 0)).max()) < 1e-3
+
+
+def test_async_stale_s0_equals_server(key):
+    ex0 = comm.get_exchange("async_stale", "fp32", G, staleness=0)
+    x = jax.random.normal(key, (G, 11))
+    state = ex0.init(x * 0.0)
+    out, state = ex0.params(x, None, state)
+    want = jnp.broadcast_to(jnp.mean(x, 0, keepdims=True), x.shape)
+    np.testing.assert_array_equal(out, want)
+
+
+def test_async_stale_bounded_staleness(key):
+    """s=1: each round only half the groups refresh their push; the
+    average mixes fresh models with <= 1-round-old ones, deterministically
+    (numpy re-simulation agrees)."""
+    s = 1
+    ex = comm.get_exchange("async_stale", "fp32", G, staleness=s)
+    x0 = jax.random.normal(key, (G, 5))
+    state = ex.init(x0)
+    pushed_ref = np.asarray(x0).copy()
+    for rnd_i in range(4):
+        x = x0 + (rnd_i + 1) * jnp.arange(G)[:, None]
+        out, state = ex.params(x, None, state)
+        fresh = (np.arange(G) + rnd_i) % (s + 1) == 0
+        pushed_ref[fresh] = np.asarray(x)[fresh]
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.broadcast_to(pushed_ref.mean(0), (G, 5)), rtol=1e-6)
+    assert int(state["round"]) == 4
+
+
+def test_wire_bytes_accounting():
+    n = 1000
+    cases = {
+        ("server", "fp32"): G * 4 * n,
+        ("server", "fp16"): G * 2 * n,
+        ("server", "int8"): G * (n + 4 * 4),          # 4 chunks of 256
+        ("server", "topk"): G * 8 * 50,               # k = 5% of 1000
+        ("none", "fp32"): 0,
+    }
+    for (topo, codec), want in cases.items():
+        ex = comm.get_exchange(topo, codec, G)
+        assert ex.wire_bytes_per_round(n) == want, (topo, codec)
+    # ring: one payload per directed edge per hop (G=4 ring: 8 edges)
+    ex = comm.get_exchange("ring", "fp32", G, mix_rounds=3)
+    assert ex.wire_bytes_per_round(n) == 8 * 3 * 4 * n
+    # async s=1: half the groups push per round (amortized)
+    ex = comm.get_exchange("async_stale", "fp32", G, staleness=1)
+    assert ex.wire_bytes_per_round(n) == G // 2 * 4 * n
+    # moment buffers ride at fp32 width
+    ex = comm.get_exchange("server", "int8", G)
+    assert ex.wire_bytes_per_round(n, moment_elems=2 * n) == \
+        G * ((n + 16) + 4 * 2 * n)
+
+
+def test_round_metrics_report_wire_bytes(key):
+    params, batch = make_problem(key)
+    layout = packing.layout_of(params)
+    n = layout.size
+    opt = optim.packed("adamw", 0.01, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    ex = comm.get_exchange("server", "int8", G)
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    _, m = rnd(st, batch)
+    # adamw: m and v buffers averaged at fp32; count not exchanged
+    assert int(m["wire_bytes"]) == ex.wire_bytes_per_round(n, 2 * n)
+    # pytree path: the moment leaves count, the counter never does
+    # (it is not exchanged on either path)
+    opt_t = optim.momentum(0.05)
+    rnd_t = jax.jit(lsgd.make_local_round(quad_loss, opt_t, cfg))
+    _, mt = rnd_t(lsgd.init_state(params, opt_t, n_groups=G), batch)
+    assert int(mt["wire_bytes"]) == 4 * G * (n + n)
+
+
+def test_pytree_counts_stay_lockstep_under_mixing(key):
+    """The int32 step counter is never exchanged (map_moments convention,
+    both paths): mixing it through the f32 gossip matmul used to truncate
+    and drift per-group counts, corrupting adamw's bias correction."""
+    params, batch = make_problem(key)
+    opt = optim.adamw(0.01)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    ex = comm.get_exchange("gossip", "fp32", G)
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G)
+    for _ in range(30):
+        st, _ = rnd(st, batch)
+    c = np.asarray(st["opt"]["count"])
+    assert c.dtype == np.int32
+    np.testing.assert_array_equal(c, np.full(G, 60, np.int32))
+
+
+def test_int8_round_converges(key):
+    """Delta-coded quantized communication preserves convergence on the
+    feasibility problem (the benchmark checks the full frontier)."""
+    params, batch = make_problem(key, r=3, d=8)
+    layout = packing.layout_of(params)
+    opt = optim.packed("sgd", 0.2, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=4)
+    ex = comm.get_exchange("server", "int8", G)
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    st, m0 = rnd(st, batch)
+    for _ in range(60):
+        st, m = rnd(st, batch)
+    assert float(jnp.mean(m["grad_sq"])) < 1e-3 * float(
+        jnp.mean(m0["grad_sq"]))
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_flat_only_codec_needs_layout(key):
+    params, _ = make_problem(key)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    for codec in ("int8", "topk"):
+        with pytest.raises(NotImplementedError):
+            lsgd.make_local_round(
+                quad_loss, optim.sgd(0.1), cfg,
+                exchange=comm.get_exchange("server", codec, G))
+
+
+def test_async_stale_refuses_opt_state_averaging(key):
+    params, _ = make_problem(key)
+    layout = packing.layout_of(params)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)  # avg_opt default
+    with pytest.raises(NotImplementedError):
+        lsgd.make_local_round(
+            quad_loss, optim.packed("sgd", 0.1, impl="jnp"), cfg,
+            layout=layout,
+            exchange=comm.get_exchange("async_stale", "fp32", G))
+
+
+def test_stateful_exchange_needs_init_state(key):
+    params, batch = make_problem(key)
+    layout = packing.layout_of(params)
+    opt = optim.packed("sgd", 0.1, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    ex = comm.get_exchange("server", "topk", G)
+    rnd = lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                exchange=ex)
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout)  # no comm
+    with pytest.raises(ValueError):
+        rnd(st, batch)
+
+
+def test_exchange_group_mismatch_raises(key):
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    with pytest.raises(ValueError):
+        lsgd.make_local_round(
+            quad_loss, optim.sgd(0.1), cfg,
+            exchange=comm.get_exchange("server", "fp32", G + 1))
+
+
+def test_async_stale_refuses_topk():
+    """Staleness drops non-pushed rounds by design; error feedback would
+    absorb their top-k entries as delivered and silently lose them."""
+    with pytest.raises(NotImplementedError):
+        comm.get_exchange("async_stale", "topk", G, staleness=1)
+
+
+def test_none_topology_skips_codec(key):
+    """A no-comm baseline must not inject quantization noise (and must
+    report zero wire bytes)."""
+    ex = comm.get_exchange("none", "int8", G)
+    x = jax.random.normal(key, (G, 50))
+    x0 = jnp.zeros_like(x)
+    # no wire -> no codec state either: nothing to allocate or carry
+    assert not ex.stateful and ex.init(x0) == {}
+    out, _ = ex.params(x, x0, {})
+    np.testing.assert_array_equal(out, x)
+    assert ex.wire_bytes_per_round(50) == 0
+    # and no layout requirement: the flat-only codec never executes
+    params = {"w": jnp.zeros(5)}
+    lsgd.make_local_round(quad_loss, optim.sgd(0.1),
+                          lsgd.LocalSGDConfig(n_groups=G, inner_steps=1),
+                          exchange=ex)
+
+
+def test_builder_meta_wire_bytes_counts_moments():
+    """Dry-run meta must agree with the round's own metrics["wire_bytes"]
+    (adamw: 2 moment buffers ride at fp32)."""
+    from repro.configs.base import InputShape, get_config
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import build_train_step
+
+    cfg = get_config("paper-mlp").reduced()
+    mesh = make_local_mesh(1, 1)
+    shape = InputShape(name="tiny", kind="train", global_batch=4,
+                       seq_len=8)
+    built = build_train_step(cfg, shape, mesh, t_inner=2,
+                             opt_name="adamw", packed=True)
+    n = built.meta["n_flat"]
+    ex = comm.get_exchange("server", "fp32", built.meta["groups"])
+    assert built.meta["wire_bytes_per_round"] == \
+        ex.wire_bytes_per_round(n, 2 * n)
+
+
+def test_unknown_names_raise():
+    with pytest.raises(ValueError):
+        comm.get_exchange("mesh?", "fp32", G)
+    with pytest.raises(ValueError):
+        comm.get_codec("fp8")
+    with pytest.raises(ValueError):
+        comm.mixing_matrix("star", 4)

@@ -201,3 +201,11 @@ def test_ops_wrappers_jit(key):
     new_p2 = ops.fused_sgd(jnp.copy(g), g, 1e-3)
     assert new_p2.shape == g.shape
     np.testing.assert_allclose(ops.sq_norm(g), jnp.sum(g * g), rtol=1e-5)
+    # comm-codec wrappers: quantize/dequantize round-trip within the
+    # per-chunk scale (stochastic rounding moves <= 1 step)
+    x = rand(key, (3, 128), jnp.float32)
+    u = jax.random.uniform(key, (3, 128))
+    qv, scales = ops.quantize_int8(x, u)
+    assert qv.dtype == jnp.int8 and scales.shape == (3, 1)
+    back = ops.dequantize_int8(qv, scales)
+    assert bool(jnp.all(jnp.abs(back - x) <= scales + 1e-7))
