@@ -7,12 +7,11 @@ baseline is compiled with --mode sync (tag 'sync'); the local-SGD round
 with t_inner=T. Both are normalized to the same token budget, then
 collective bytes per token are compared."""
 import json
-import os
 import subprocess
 import sys
 from pathlib import Path
 
-from benchmarks.common import save_result
+from benchmarks.common import child_env, save_result
 
 ROOT = Path(__file__).resolve().parents[1]
 DRY = ROOT / "experiments" / "dryrun"
@@ -31,12 +30,9 @@ def ensure_record(arch: str, mode: str, tag: str, t_inner: int = 4):
     if tag:
         cmd += ["--tag", tag]
     # inherit the full environment (venv interpreters, PATH, XLA flags)
-    # and only PREPEND our src to PYTHONPATH
-    env = dict(os.environ)
-    env["PYTHONPATH"] = str(ROOT / "src") + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    # and only PREPEND our src to PYTHONPATH — the shared helper
     subprocess.run(cmd, check=True, capture_output=True, text=True,
-                   cwd=str(ROOT), env=env, timeout=3600)
+                   cwd=str(ROOT), env=child_env(), timeout=3600)
     return json.loads(p.read_text())
 
 

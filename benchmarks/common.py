@@ -1,5 +1,6 @@
 """Shared helpers for the paper-figure benchmarks."""
 import json
+import os
 import sys
 import time
 from pathlib import Path
@@ -9,6 +10,23 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.core.reference import rounds_to, run_alg1  # noqa: F401,E402
 
 OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+
+def child_env(force_devices: int = 0) -> dict:
+    """Environment for a benchmark/test child process: inherit everything
+    (venv interpreters, PATH, XLA flags — PR 2 broke comm_reduction by
+    rebuilding a bare env), PREPEND repo src to PYTHONPATH, and
+    optionally force a host-platform device count (jax locks the count
+    at first init, so multi-device runs need a fresh process)."""
+    env = dict(os.environ)
+    root = Path(__file__).resolve().parents[1]
+    env["PYTHONPATH"] = str(root / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if force_devices:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={force_devices} "
+            + env.get("XLA_FLAGS", "")).strip()
+    return env
 
 
 def save_result(name: str, payload: dict) -> Path:

@@ -172,6 +172,94 @@ def measure_pair(params, layout, loss_fn, opt_name, t_inner, batch_t,
     return out
 
 
+def _sharded_row(reps: int) -> dict:
+    """Runs INSIDE the forced-8-device child (--sharded-child): the same
+    packed T=16 sgd round on a (data=4, model=2) host mesh, executed two
+    ways on the SAME padded ShardedLayout —
+
+      replicated  buffer replicated within a group (the pre-shardexec
+                  mesh path), GSPMD partitions the jnp fusion
+      sharded     buffer split over "model", fused update + exchange in
+                  shard_map blocks (DESIGN.md §9)
+
+    Timed with impl="jnp" on both (the Pallas kernels only COMPILE on
+    TPU; interpret mode would time the emulator, not the engine). The
+    per-device state bytes are the memory headline: sharded cuts them by
+    n_shards. Wall-clock on a host-platform CPU mesh mostly measures
+    collective emulation — reported honestly, the win is the TPU path."""
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.sharding import shardexec as shx
+
+    cfg = get_config("paper-lenet").reduced()
+    params = _params_for(cfg)
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(4, 2),
+                ("data", "model"))
+    sexec = shx.plan_for(mesh)
+    layout = packing.shard_layout(packing.layout_of(params),
+                                  sexec.n_shards)
+    t_inner = 16
+    batch = {"c": jnp.linspace(0.0, 1.0, G)}
+    lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner)
+    out = {"mesh": [4, 2], "n_flat": layout.size,
+           "n_flat_padded": layout.padded, "n_shards": sexec.n_shards,
+           "T": t_inner, "opt": "sgd"}
+    runners, per_dev = {}, {}
+    for tag, sx in (("replicated", None), ("sharded", sexec)):
+        opt = optim.get("sgd", 0.05, packed=True, impl="jnp")
+        rnd = lsgd.make_local_round(probe_loss, opt, lcfg, layout=layout,
+                                    shardexec=sx)
+        spec = sexec.buf_spec() if sx is not None else P("data")
+        buf_sh = NamedSharding(mesh, spec)
+        rep_sh = NamedSharding(mesh, P())
+        state = lsgd.init_state(params, opt, n_groups=G, layout=layout)
+        state = jax.tree.map(
+            lambda x: jax.device_put(
+                x, buf_sh if (x.ndim == 2 and x.shape[-1] == layout.padded)
+                else rep_sh), state)
+        # per-device bytes of ONE (G, Np) state buffer under this
+        # placement (sgd: just params; momentum/adamw moments scale the
+        # same way) — the memory-scaling headline
+        per_dev[tag] = int(np.prod(
+            buf_sh.shard_shape((G, layout.padded)))) * 4
+        runners[tag] = _Runner(jax.jit(rnd, donate_argnums=(0,)), state,
+                               batch)
+    block = max(2, reps // 3)
+    done = 0
+    while done < reps:
+        for r in runners.values():
+            r.run_block(min(block, reps - done))
+        done += block
+    for tag, r in runners.items():
+        out[tag] = {"round_s": r.median_s(),
+                    "steps_per_s": t_inner / r.median_s(),
+                    "state_buf_bytes_per_device": per_dev[tag]}
+    out["speedup_sharded_vs_replicated"] = (
+        out["replicated"]["round_s"] / out["sharded"]["round_s"])
+    out["per_device_state_reduction"] = (
+        per_dev["replicated"] / per_dev["sharded"])
+    return out
+
+
+def _run_sharded_subprocess(reps: int) -> dict:
+    """Fork a child with 8 forced host devices (the parent runs on the
+    real single device; jax locks the count at init) and collect the
+    sharded-vs-replicated row it prints as its last stdout line."""
+    import subprocess
+
+    from benchmarks.common import child_env
+
+    r = subprocess.run(
+        [sys.executable, str(Path(__file__).resolve()), "--sharded-child",
+         str(reps)],
+        env=child_env(force_devices=8), capture_output=True, text=True,
+        timeout=1800)
+    if r.returncode != 0:
+        return {"error": (r.stderr or r.stdout)[-2000:]}
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
 def _real_model_row(reps):
     """Supplementary: the same comparison with the REAL transformer loss
     (fwd/bwd dominates on CPU; expect ~1x — reported for honesty)."""
@@ -238,6 +326,20 @@ def main() -> dict:
     }
     if not smoke:
         payload["real_model"] = _real_model_row(reps)
+    # sharded-vs-replicated on a forced 8-device host mesh (DESIGN.md §9)
+    # — runs in smoke too so CI exercises the shard_map wiring; a broken
+    # child must FAIL the run, not record an error blob and stay green
+    payload["sharded"] = _run_sharded_subprocess(max(3, reps // 2))
+    if "error" in payload["sharded"]:
+        save_result("round_throughput", payload)
+        raise SystemExit("sharded round-throughput child failed:\n"
+                         + payload["sharded"]["error"])
+    s = payload["sharded"]
+    print(f"  sharded(4x2) T={s['T']} {s['opt']}: replicated "
+          f"{s['replicated']['steps_per_s']:.1f} st/s, sharded "
+          f"{s['sharded']['steps_per_s']:.1f} st/s "
+          f"({s['speedup_sharded_vs_replicated']:.2f}x; state/device "
+          f"1/{s['per_device_state_reduction']:.0f})", flush=True)
     save_result("round_throughput", payload)
     if not smoke:
         # the committed perf-trajectory artifact — full runs only, so CI
@@ -248,5 +350,9 @@ def main() -> dict:
 
 
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--sharded-child":
+        reps_ = int(sys.argv[2]) if len(sys.argv) > 2 else 5
+        print(json.dumps(_sharded_row(reps_), default=float))
+        sys.exit(0)
     r = main()
     print(json.dumps(r["headline"], indent=1))

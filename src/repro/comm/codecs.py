@@ -48,6 +48,20 @@ class Codec:
     flat_only: bool = False
     stateful: bool = False
     impl: str = "jnp"
+    # Shard-aware hooks (DESIGN.md §9). Chunked codecs (int8) expose the
+    # per-(rows, chunk) core so the shard_map exchange can generate the
+    # stochastic-rounding noise OUTSIDE the shard_map block (full rows
+    # shape, same key) — each device then consumes its own row slice and
+    # the sharded result is BIT-IDENTICAL to the replicated path.
+    #   noise(count, rows_shape) -> u          (deterministic per count)
+    #   compress_rows(rows, u) -> decoded rows (pure, shard-local safe)
+    chunk: int = 0
+    noise: Callable[[Any, tuple], Any] = None
+    compress_rows: Callable[[Any, Any], Any] = None
+    # per-group state (top-k error-feedback residual) cannot be updated
+    # shard-locally AND the selection is a global per-group top-k — the
+    # shard_map exchange refuses these (DESIGN.md §9)
+    shardable: bool = True
 
 
 def _no_state(_params_like):
@@ -91,27 +105,39 @@ def int8(chunk: int = 256, seed: int = 0, *, impl: str = "auto") -> Codec:
     def init(_params_like):
         return {"count": jnp.zeros((), jnp.int32)}
 
-    def compress(delta, state):
-        rows = packing.chunk_rows(delta, chunk)
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), state["count"])
-        u = jax.random.uniform(key, rows.shape, jnp.float32)
+    def noise(count, rows_shape):
+        """Stochastic-rounding bits for one compress application:
+        deterministic per (seed, count) and per element — the shard_map
+        exchange calls this at the FULL rows shape so every shard's slice
+        matches the replicated path exactly."""
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), count)
+        return jax.random.uniform(key, rows_shape, jnp.float32)
+
+    def compress_rows(rows, u):
+        """Quantize+dequantize (rows, chunk) with given noise — pure, so
+        it is safe on a shard-local row slice (one fp32 scale per row;
+        rows never straddle shards under a chunk-aligned ShardedLayout)."""
         if impl == "pallas":
             from repro.kernels import use_interpret
             from repro.kernels.quantize import dequantize_int8, quantize_int8
             q, scales = quantize_int8(rows, u, interpret=use_interpret())
-            out = dequantize_int8(q, scales, interpret=use_interpret())
-        else:
-            amax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)
-            scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
-            q = jnp.clip(jnp.floor(rows / scale + u),
-                         -127.0, 127.0).astype(jnp.int8)
-            out = q.astype(jnp.float32) * scale
+            return dequantize_int8(q, scales, interpret=use_interpret())
+        amax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)
+        scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.floor(rows / scale + u),
+                     -127.0, 127.0).astype(jnp.int8)
+        return q.astype(jnp.float32) * scale
+
+    def compress(delta, state):
+        rows = packing.chunk_rows(delta, chunk)
+        out = compress_rows(rows, noise(state["count"], rows.shape))
         return (packing.unchunk_rows(out, delta.shape),
                 {"count": state["count"] + 1})
 
     return Codec("int8", compress,
                  lambda n: n + 4 * math.ceil(n / chunk), init,
-                 flat_only=True, stateful=True, impl=impl)
+                 flat_only=True, stateful=True, impl=impl,
+                 chunk=chunk, noise=noise, compress_rows=compress_rows)
 
 
 def topk(frac: float = 0.05) -> Codec:
@@ -142,7 +168,7 @@ def topk(frac: float = 0.05) -> Codec:
         return 8 * max(1, int(round(frac * n)))
 
     return Codec("topk", compress, wire_bytes, init,
-                 flat_only=True, stateful=True)
+                 flat_only=True, stateful=True, shardable=False)
 
 
 CODECS = ("fp32", "fp16", "bf16", "int8", "topk")

@@ -90,6 +90,10 @@ class Exchange:
 
     # -- mixing -----------------------------------------------------------
 
+    def _mix_leaf_once(self, x, w):
+        return jnp.tensordot(w, x.astype(jnp.float32),
+                             axes=[[1], [0]]).astype(x.dtype)
+
     def _mix_leaf(self, x):
         if self.topology == "none":
             return x
@@ -97,6 +101,10 @@ class Exchange:
             # identical ops to the pre-comm average_groups (bit-exact)
             m = jnp.mean(x, axis=0, keepdims=True)
             return jnp.broadcast_to(m, x.shape)
+        # codec-free k-hop mix: ONE upcast, all hops in fp32, one downcast
+        # (per-hop round-tripping to a bf16 leaf dtype would inject k-1
+        # extra rounding steps; the lossy path casts per hop by design —
+        # that IS the wire behavior there)
         w = jnp.asarray(self.w, jnp.float32)
         y = x.astype(jnp.float32)
         for _ in range(self.mix_rounds):
@@ -110,6 +118,25 @@ class Exchange:
 
     # -- the communication step -------------------------------------------
 
+    def _decentral_lossy(self, x_G, x0_G, cstate):
+        """ring/gossip with a lossy codec: RE-compress at every mixing hop
+        (each hop's payload is a fresh wire transmission — the byte
+        accounting already counts per hop, and now the noise model does
+        too). Each node encodes the delta vs its previously TRANSMITTED
+        (decoded) value — hop 0 vs the round start, hop h vs hop h-1's
+        decoded payload — so what's compressed is a hop-sized difference
+        that shrinks with consensus, and error feedback (top-k residual)
+        updates once per hop. Returns (mixed, codec_state)."""
+        w = jnp.asarray(self.w, jnp.float32)
+        y, ref = x_G, x0_G
+        for _ in range(self.mix_rounds):
+            delta = jax.tree.map(lambda a, b: a - b, y, ref)
+            delta_hat, cstate = self.codec.compress(delta, cstate)
+            y_hat = jax.tree.map(lambda b, d: b + d, ref, delta_hat)
+            ref = y_hat
+            y = jax.tree.map(lambda v: self._mix_leaf_once(v, w), y_hat)
+        return y, cstate
+
     def params(self, x_G, x0_G, comm_state: dict):
         """One exchange of the models: ``x_G`` are the post-local-step
         params (leading G axis), ``x0_G`` the round-start params — the
@@ -121,6 +148,13 @@ class Exchange:
             # "none" skips the codec too: nothing goes on the wire, so a
             # no-comm baseline must not inject quantization noise
             x_hat = x_G
+        elif self.w is not None:
+            # decentralized + lossy: codec applied per mixing hop
+            mixed, cstate = self._decentral_lossy(
+                x_G, x0_G, comm_state.get("codec", {}))
+            if self.codec.stateful:
+                new_state["codec"] = cstate
+            return mixed, new_state
         else:
             delta = jax.tree.map(lambda a, b: a - b, x_G, x0_G)
             delta_hat, cstate = self.codec.compress(
@@ -147,12 +181,10 @@ class Exchange:
     # -- wire accounting ---------------------------------------------------
 
     def senders_per_round(self) -> float:
-        """Point-to-point payloads one round puts on the wire. server:
-        G uplinks. ring/gossip: one payload per directed edge per mixing
-        hop. async_stale: amortized over the staleness cycle (each group
-        pushes once per s+1 rounds; exact when (s+1) divides G). Broadcast
-        downlink is topology-dependent (tree/multicast) and excluded —
-        the accounting is uplink-only, consistent across backends."""
+        """UPLINK payloads one round puts on the wire. server: G uplinks.
+        ring/gossip: one payload per directed edge per mixing hop.
+        async_stale: amortized over the staleness cycle (each group pushes
+        once per s+1 rounds; exact when (s+1) divides G)."""
         if self.topology == "none":
             return 0.0
         if self.topology == "server":
@@ -161,13 +193,46 @@ class Exchange:
             return self.n_groups / (self.staleness + 1)
         return float(topo_mod.n_edge_sends(self.w) * self.mix_rounds)
 
+    def receivers_per_round(self) -> float:
+        """DOWNLINK payloads per round, per topology (DESIGN.md §8):
+        server broadcasts the new average to all G groups; ring/gossip are
+        symmetric (every edge payload is one node's uplink and its
+        neighbor's downlink, so down == up); async_stale answers each
+        PUSH with the fresh average (pull-on-push — amortized like the
+        uplink; note the simulated round idealizes this by handing every
+        group the mean, the accounting models the real per-push pull)."""
+        # every topology's downlink currently mirrors its uplink count
+        # (single source until one actually diverges)
+        return self.senders_per_round()
+
+    def _per_payload_bytes(self, n_params: int, moment_elems: int) -> int:
+        """One payload: the codec'd params buffer plus (when the round
+        averages opt state) the moment buffers at full fp32 width. The
+        downlink rides at the same width — the server re-encodes the new
+        mean as a delta against its last broadcast with the same codec."""
+        return self.codec.wire_bytes(n_params) + 4 * moment_elems
+
+    def wire_bytes_up(self, n_params: int, moment_elems: int = 0) -> int:
+        return int(round(self.senders_per_round()
+                         * self._per_payload_bytes(n_params, moment_elems)))
+
+    def wire_bytes_down(self, n_params: int, moment_elems: int = 0) -> int:
+        return int(round(self.receivers_per_round()
+                         * self._per_payload_bytes(n_params, moment_elems)))
+
     def wire_bytes_per_round(self, n_params: int,
                              moment_elems: int = 0) -> int:
-        """Exact encoded payload bytes per round: every sender ships the
-        codec'd params buffer plus (when the round averages opt state)
-        the moment buffers at full fp32 width."""
-        per_sender = self.codec.wire_bytes(n_params) + 4 * moment_elems
-        return int(round(self.senders_per_round() * per_sender))
+        """TOTAL physical payload bytes per round (was uplink-only before
+        downlink accounting landed; per-direction numbers are
+        ``wire_bytes_up`` / ``wire_bytes_down``). server/async: pushes and
+        broadcast replies are DISTINCT payloads — the total is their sum.
+        ring/gossip: each edge payload is one node's uplink AND its
+        neighbor's downlink — the SAME transmission viewed from both
+        endpoints — so the total counts it once, not twice."""
+        up = self.wire_bytes_up(n_params, moment_elems)
+        if self.w is not None:
+            return up
+        return up + self.wire_bytes_down(n_params, moment_elems)
 
 
 def get_exchange(topology: str = "server", codec: str = "fp32",

@@ -104,19 +104,24 @@ def _check_comm_state(exch, state_G):
 
 
 def _round_wire_bytes(exch, params_G, opt_G, avg_opt: bool,
-                      n_groups: int) -> int:
+                      n_groups: int) -> dict:
     """Exact payload bytes this round puts on the wire (static ints —
     shapes only), matching what the round actually exchanges: the params
     buffer through the codec, plus — when the round averages opt state —
     the moment buffers at fp32. The step counter is never exchanged on
-    either path (map_moments convention)."""
+    either path (map_moments convention). Returns the three metric keys:
+    ``wire_bytes_up`` / ``wire_bytes_down`` per direction (DESIGN.md §8
+    downlink models) and ``wire_bytes`` — the physical total (the key
+    that predates downlink accounting; p2p payloads count once)."""
     n = sum(l.size // n_groups for l in jax.tree.leaves(params_G))
     m = 0
     if avg_opt:
         m = sum(l.size // n_groups
                 for k, v in opt_G.items() if k != "count"
                 for l in jax.tree.leaves(v))
-    return exch.wire_bytes_per_round(n, m)
+    return {"wire_bytes": exch.wire_bytes_per_round(n, m),
+            "wire_bytes_up": exch.wire_bytes_up(n, m),
+            "wire_bytes_down": exch.wire_bytes_down(n, m)}
 
 
 def grad_sq_norm(grads, use_pallas: bool = False) -> jax.Array:
@@ -149,7 +154,8 @@ def _grad_sq_norm_groups(grads_G, use_pallas: bool = False) -> jax.Array:
 
 def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
                      layout: Optional[packing.Layout] = None,
-                     exchange: Optional["comm_mod.Exchange"] = None):
+                     exchange: Optional["comm_mod.Exchange"] = None,
+                     shardexec=None):
     """Build ``round(state_G, batch_G) -> (state_G, metrics)``.
 
     loss_fn(params, batch) -> scalar.
@@ -166,8 +172,13 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
 
     ``exchange`` selects the communication backend (repro.comm,
     DESIGN.md §8): topology x codec + exact wire-byte accounting
-    (``metrics["wire_bytes"]``). Default: server/fp32 — bit-exact with
-    the pre-comm ``average_groups``.
+    (``metrics["wire_bytes"]`` + per-direction up/down). Default:
+    server/fp32 — bit-exact with the pre-comm ``average_groups``.
+
+    ``shardexec`` (a ``sharding.shardexec.ShardExec``, packed path only)
+    runs the fused update, the codec, and the exchange inside shard_map
+    blocks on shard-local slices of the (G, Np) buffer — ``layout`` must
+    then be the matching ``packing.ShardedLayout`` (DESIGN.md §9).
     """
     exch = _resolve_exchange(exchange, cfg, layout)
     if layout is not None or getattr(opt, "packed", False):
@@ -175,7 +186,13 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
             raise ValueError(
                 "packed rounds need BOTH a packing.Layout and a packed "
                 "optimizer (optim.packed / optim.get(..., packed=True))")
-        return _make_packed_local_round(loss_fn, opt, cfg, layout, exch)
+        return _make_packed_local_round(loss_fn, opt, cfg, layout, exch,
+                                        shardexec)
+    if shardexec is not None:
+        raise ValueError(
+            "shardexec shards the packed flat buffer — it has no meaning "
+            "for the per-leaf pytree round; pass layout= and a packed "
+            "optimizer (DESIGN.md §9)")
     vg = jax.value_and_grad(loss_fn)
 
     def fixed_batch_group(state, batch, t_i=None):
@@ -263,9 +280,9 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
             new_opt = map_moments(exch.mix, st["opt"])
         else:
             new_opt = st["opt"]
-        metrics["wire_bytes"] = _round_wire_bytes(
+        metrics.update(_round_wire_bytes(
             exch, st["params"], st["opt"], cfg.average_opt_state,
-            cfg.n_groups)
+            cfg.n_groups))
         out = {"params": new_params, "opt": new_opt}
         if "comm" in state_G:
             out["comm"] = comm_state
@@ -281,7 +298,7 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
 
 def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
                              cfg: LocalSGDConfig, layout: packing.Layout,
-                             exch: "comm_mod.Exchange"):
+                             exch: "comm_mod.Exchange", shardexec=None):
     """Flat-buffer local round (see DESIGN.md §6).
 
     The T-step inner loop scans over fused whole-buffer updates: grads are
@@ -289,6 +306,11 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
     buffer and packed with one concatenate; ``opt.step`` then updates all
     G*N elements in one fused pass and the round ends with a single flat
     mean over G — one all-reduce of the model per round on a mesh.
+
+    With ``shardexec`` the update, the codec, the exchange, and the traj
+    ||g||² reduction run in shard_map blocks on shard-local slices of the
+    (G, Np) buffer instead of relying on GSPMD partitioning — this is what
+    lets the real Pallas kernels run on a sharded mesh (DESIGN.md §9).
 
     cfg.metrics selects the metric contract: "final" (default — the hot
     path; per-step work is JUST the fused update, loss/||grad||^2 are
@@ -317,6 +339,19 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
     use_pallas = getattr(opt, "impl", "jnp") == "pallas"
     flat_vg = packing.value_and_flat_grad(loss_fn, layout)
 
+    if shardexec is not None:
+        opt_step = shardexec.opt_step(opt)
+        exch_params = shardexec.exchange(exch, layout)
+        mix_moments = shardexec.mix(exch)
+        gsq_groups = shardexec.sq_norm_groups(use_pallas)
+    else:
+        opt_step = opt.step
+        exch_params = exch.params
+        mix_moments = exch.mix
+
+        def gsq_groups(g_G):
+            return _grad_sq_norm_groups(g_G, use_pallas)
+
     if cfg.t_i is not None:
         assert len(cfg.t_i) == cfg.n_groups, cfg.t_i
         assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
@@ -336,7 +371,7 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
 
         def body(state, t, batch_t):
             loss_G, g_G = jax.vmap(flat_vg)(state["params"], batch_t)
-            new_p, new_o = opt.step(state["params"], g_G, state["opt"])
+            new_p, new_o = opt_step(state["params"], g_G, state["opt"])
             if t_vec is not None:
                 keep = (t < t_vec)[:, None]           # (G, 1)
                 new_p = jnp.where(keep, new_p, state["params"])
@@ -351,7 +386,7 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
                 # hot path: no per-step diagnostics to materialize — XLA
                 # keeps only the fused update chain
                 return new, None
-            gsq_G = _grad_sq_norm_groups(g_G, use_pallas)
+            gsq_G = gsq_groups(g_G)
             return new, (loss_G, gsq_G)
 
         ts = jnp.arange(cfg.inner_steps)
@@ -396,17 +431,17 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
                        "inner_steps": n_steps,
                        "grad_sq": gsq_G}
         # ---- communication: ONE flat buffer through the exchange --------
-        new_params, comm_state = exch.params(state_G["params"], x0,
+        new_params, comm_state = exch_params(state_G["params"], x0,
                                              comm_state)
         if cfg.average_opt_state:
             # moment buffers follow the topology at fp32; the shared step
             # counter stays untouched (map_moments convention)
-            new_opt = map_moments(exch.mix, state_G["opt"])
+            new_opt = map_moments(mix_moments, state_G["opt"])
         else:
             new_opt = state_G["opt"]
-        metrics["wire_bytes"] = _round_wire_bytes(
+        metrics.update(_round_wire_bytes(
             exch, state_G["params"], state_G["opt"],
-            cfg.average_opt_state, cfg.n_groups)
+            cfg.average_opt_state, cfg.n_groups))
         out = {"params": new_params, "opt": new_opt}
         if had_comm:
             out["comm"] = comm_state

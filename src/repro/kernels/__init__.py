@@ -11,13 +11,31 @@ def use_interpret() -> bool:
     return _jax.default_backend() != "tpu"
 
 
+def pallas_supported() -> bool:
+    """Backends the Pallas kernels actually execute on: compiled VMEM
+    kernels on TPU, interpret-mode (kernel-body validation) on CPU. Other
+    backends (e.g. an untested GPU lowering) must REFUSE an explicit
+    impl="pallas" rather than silently running something else."""
+    return _jax.default_backend() in ("tpu", "cpu")
+
+
 def resolve_impl(impl: str) -> str:
     """Shared impl="auto" resolution for everything that fronts a Pallas
     kernel with a jnp fallback (packed optimizers, comm codecs): "jnp"
-    everywhere except a real TPU backend."""
+    everywhere except a real TPU backend. An EXPLICIT impl="pallas" on a
+    backend the kernels don't support raises instead of silently falling
+    back to jnp — callers asked for the kernels, not an approximation."""
     if impl == "auto":
         return "jnp" if use_interpret() else "pallas"
-    assert impl in ("pallas", "jnp"), impl
+    if impl not in ("pallas", "jnp"):
+        raise ValueError(
+            f"unknown impl {impl!r} (have 'auto', 'jnp', 'pallas')")
+    if impl == "pallas" and not pallas_supported():
+        raise NotImplementedError(
+            f"impl='pallas' requested on backend "
+            f"{_jax.default_backend()!r}: the fused/quantize kernels "
+            "compile on TPU and run in interpret mode on CPU only — pass "
+            "impl='jnp' (same math, one XLA fusion) or impl='auto'")
     return impl
 
 

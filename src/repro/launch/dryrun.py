@@ -70,7 +70,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             schedule: str = "rect", embed_impl: str = "",
             packed: bool = False, comm: str = "server",
             codec: str = "fp32", mix_rounds: int = 1,
-            staleness: int = 1) -> dict:
+            staleness: int = 1, impl: str = "auto") -> dict:
     import dataclasses as _dc
 
     import jax
@@ -92,7 +92,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
         kw = {"mode": mode, "t_inner": t_inner, "opt_name": opt_name,
               "policy": policy, "schedule": schedule, "packed": packed,
               "comm": comm, "codec": codec, "mix_rounds": mix_rounds,
-              "staleness": staleness}
+              "staleness": staleness, "impl": impl}
         if moe_impl:
             kw["moe_impl"] = moe_impl
     elif shape.kind == "prefill":
@@ -225,7 +225,13 @@ def main() -> None:
     ap.add_argument("--opt", default="sgd")
     ap.add_argument("--packed", action="store_true",
                     help="flat-buffer train round (DESIGN.md §6): records "
-                         "the packed engine's memory/collective profile")
+                         "the packed engine's memory/collective profile "
+                         "(sharded over the in-group axes when the mesh "
+                         "has them — DESIGN.md §9)")
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="packed update/codec kernels (pallas needs the "
+                         "sharded packed path on multi-device meshes)")
     ap.add_argument("--comm", default="server",
                     choices=["server", "ring", "gossip", "async_stale",
                              "none"],
@@ -248,6 +254,8 @@ def main() -> None:
     ap.add_argument("--embed-impl", default="",
                     choices=["", "onehot", "gather"])
     args = ap.parse_args()
+    if args.impl != "auto" and not args.packed:
+        ap.error("--impl selects the packed fused kernels; add --packed")
 
     if args.all:
         extra = []
@@ -267,6 +275,8 @@ def main() -> None:
             extra += ["--mix-rounds", str(args.mix_rounds)]
         if args.staleness != 1:
             extra += ["--staleness", str(args.staleness)]
+        if args.impl != "auto":
+            extra += ["--impl", args.impl]
         sys.exit(1 if drive_all(args.multi_pod, args.tag, args.force,
                                 extra) else 0)
 
@@ -279,7 +289,8 @@ def main() -> None:
                       fsdp=args.fsdp, param_dtype=args.param_dtype,
                       schedule=args.schedule, embed_impl=args.embed_impl,
                       packed=args.packed, comm=args.comm, codec=args.codec,
-                      mix_rounds=args.mix_rounds, staleness=args.staleness)
+                      mix_rounds=args.mix_rounds, staleness=args.staleness,
+                      impl=args.impl)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

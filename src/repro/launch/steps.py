@@ -24,6 +24,7 @@ from repro.configs.base import ArchConfig, InputShape
 from repro.core import localsgd as lsgd
 from repro.optim import packing
 from repro.models import build_model
+from repro.sharding import shardexec as shx
 from repro.sharding import specs as sh
 
 SDS = jax.ShapeDtypeStruct
@@ -141,20 +142,28 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      schedule: str = "rect", moe_impl: Optional[str] = None,
                      policy: str = "tp", packed: bool = False,
                      comm: str = "server", codec: str = "fp32",
-                     mix_rounds: int = 1, staleness: int = 1) -> BuiltStep:
+                     mix_rounds: int = 1, staleness: int = 1,
+                     impl: str = "auto") -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
     on an fsdp mesh (params additionally sharded over "fsdp").
 
     packed=True runs the round on the flat-buffer fast path (DESIGN.md
-    §6): state leaves are single (G, N) f32 buffers sharded over the G
-    axis only (params replicated within a group, like policy="dp"), every
-    inner step is one fused update pass, and the state args are donated.
+    §6): state leaves are single (G, Np) f32 buffers, every inner step is
+    one fused update pass, and the state args are donated. On meshes with
+    an in-group axis ("model"/"fsdp" > 1) the buffer additionally shards
+    over those axes and the fused/codec kernels run inside shard_map
+    blocks on the local shards (sharded execution, DESIGN.md §9);
+    otherwise the buffer is replicated within a group.
 
     comm/codec select the exchange backend (repro.comm, DESIGN.md §8) for
     local-SGD rounds. Flat-only codecs (int8/topk) need packed=True; comm
     state (codec residuals, staleness buffers) rides in the train state
-    and shares its shardings."""
+    and shares its shardings.
+
+    impl picks the packed-update/codec kernels: "pallas" (fused kernels —
+    sharded or single-device packed paths only), "jnp" (one XLA fusion),
+    "auto" (pallas where supported, else jnp)."""
     if mode == "sync" and (comm != "server" or codec != "fp32"):
         raise ValueError(
             "comm/codec select the local-SGD model exchange; sync-DP "
@@ -163,7 +172,10 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     if moe_impl:
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     model = build_model(cfg, schedule=schedule)
-    if "fsdp" in mesh.axis_names and policy == "tp":
+    if "fsdp" in mesh.axis_names and policy == "tp" and not packed:
+        # (packed rounds skip the per-layer fsdp hooks: the fsdp axis
+        # shards the flat buffer itself via shardexec, and constraining
+        # the unpacked views would fight that layout)
         model = _fsdp_model(cfg, mesh, model, schedule,
                             act_axes=("fsdp",))
     if cfg.param_dtype != "float32":
@@ -172,17 +184,30 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
             lambda d: dataclasses.replace(d, dtype=cfg.param_dtype),
             model.defs, is_leaf=is_pdef)
     if packed:
-        # the packed buffer shards over the G axis only (replicated within
-        # a group); refuse policy/fsdp selections rather than silently
-        # recording a profile the caller did not ask for
-        if policy != "tp" or "fsdp" in mesh.axis_names:
+        # the packed buffer has its own sharding story (G axis + in-group
+        # shard axes via shardexec); the per-tensor policies don't apply
+        if policy != "tp":
             raise NotImplementedError(
-                "packed train steps do not support policy/fsdp sharding "
-                "yet (the flat buffer is replicated within a group); drop "
-                "--packed or the policy/fsdp flags")
+                "packed train steps ignore per-tensor policies (the flat "
+                "buffer shards over the in-group axes via shardexec, "
+                "DESIGN.md §9); drop --packed or the policy flag")
+        if mode == "sync" and "fsdp" in mesh.axis_names:
+            # sync keeps the replicated (N,) buffer (no G axis, no
+            # shard_map path) — refuse rather than silently record a
+            # replicated profile on a mesh the caller built for sharding
+            raise NotImplementedError(
+                "packed sync steps keep the replicated (N,) buffer; "
+                "in-group sharding is a localsgd feature (DESIGN.md §9) "
+                "— drop the fsdp axis or use mode='localsgd'")
         return _build_packed_train_step(cfg, shape, mesh, model, opt_name,
                                         lr, mode, t_inner, comm, codec,
-                                        mix_rounds, staleness)
+                                        mix_rounds, staleness, impl)
+    if impl != "auto":
+        # same no-silent-fallback rule as optim.get: the pytree round has
+        # no fused-kernel path for impl to select
+        raise ValueError(
+            f"impl={impl!r} selects the packed fused kernels; pass "
+            "packed=True (the pytree round has no Pallas path)")
     opt = optim.get(opt_name, lr)
     dp = sh.dp_axes(mesh)
     pspecs = sh.resolve_specs(model.defs, mesh, policy=policy)
@@ -243,6 +268,7 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     # buffers ride at fp32; the step counter is never exchanged
     moment_elems = _n({k: v for k, v in opt_1.items()
                        if k != "count"}) if avg_opt else 0
+    n_p = _n(params_abs)
     return BuiltStep(
         round_, (state_abs, batch_abs),
         (_ns(mesh, sspecs), _ns(mesh, bspecs)),
@@ -252,17 +278,46 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "t_inner": t_inner, "policy": policy,
          "param_dtype": cfg.param_dtype, "comm": exchange.name,
          "wire_bytes_per_round": exchange.wire_bytes_per_round(
-             _n(params_abs), moment_elems)})
+             n_p, moment_elems),
+         "wire_bytes_up_per_round": exchange.wire_bytes_up(
+             n_p, moment_elems),
+         "wire_bytes_down_per_round": exchange.wire_bytes_down(
+             n_p, moment_elems)})
+
+
+def _packed_impl(impl: str, mesh: Mesh, sexec) -> str:
+    """Resolve the fused-kernel/codec impl for a packed mesh step. With a
+    sharded plan (sexec, localsgd only — sync never enters shard_map) or
+    a single-device mesh any impl is executable: the kernels run on
+    shard-local (or whole) buffers. Everywhere else a pallas_call is not
+    GSPMD-partitionable — over the G-sharded localsgd buffer it would
+    all-gather the state every step, and even over sync's replicated
+    buffer it is the exact on-mesh configuration DESIGN.md §6 rules out —
+    so an explicit "pallas" raises a clear error (never a silent jnp
+    substitution) and "auto" resolves to "jnp"."""
+    from repro.kernels import resolve_impl
+    if sexec is not None or mesh.devices.size == 1:
+        return resolve_impl(impl)
+    if impl == "pallas":
+        raise NotImplementedError(
+            "impl='pallas' on a multi-device mesh only runs inside the "
+            "sharded localsgd path (a pallas_call is not "
+            "GSPMD-partitionable outside shard_map). Use a mesh with "
+            "'model'/'fsdp' > 1 and mode='localsgd' (DESIGN.md §9), a "
+            "single-device mesh, or impl='jnp'")
+    return "jnp" if impl == "auto" else resolve_impl(impl)
 
 
 def _build_exchange(comm: str, codec: str, n_groups: int,
-                    mix_rounds: int = 1, staleness: int = 1):
-    """Exchange for a mesh step builder. The codec impl is pinned to
-    "jnp" for the same reason the packed optimizers pin it (DESIGN.md §6):
-    a pallas_call over the G-sharded buffer is not GSPMD-partitionable.
+                    mix_rounds: int = 1, staleness: int = 1,
+                    impl: str = "jnp"):
+    """Exchange for a mesh step builder; ``impl`` selects the codec
+    kernels and must already be resolved for the execution path
+    (``_packed_impl`` — shard_map runs the Pallas quantize kernels on
+    shard-local rows; the replicated fallback keeps the jnp reference).
     Returns (exchange, average_opt_state) — async_stale keeps staleness
     buffers for params only, so it turns opt-state averaging off."""
-    exchange = comm_mod.get_exchange(comm, codec, n_groups, impl="jnp",
+    exchange = comm_mod.get_exchange(comm, codec, n_groups, impl=impl,
                                      mix_rounds=mix_rounds,
                                      staleness=staleness)
     return exchange, exchange.supports_opt_state_averaging
@@ -297,21 +352,27 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                              model, opt_name: str, lr: float, mode: str,
                              t_inner: int, comm: str = "server",
                              codec: str = "fp32", mix_rounds: int = 1,
-                             staleness: int = 1) -> BuiltStep:
-    """Flat-buffer train step (DESIGN.md §6): one (G, N) f32 buffer per
-    state part, sharded over the G axis only — within a group the buffer
-    is replicated (TP-sharded packing is future work). State is donated so
-    XLA updates the model in place across the T-step round.
-
-    impl is pinned to "jnp": the one-fused-pass update is a plain XLA
-    fusion, which GSPMD partitions over the G-sharded buffer. The Pallas
-    kernels are NOT partitionable without shard_map wiring (future PR) —
-    using them here would silently all-gather the (G, N) state every
-    step (DESIGN.md §6)."""
-    opt = optim.get(opt_name, lr, packed=True, impl="jnp")
+                             staleness: int = 1,
+                             impl: str = "auto") -> BuiltStep:
+    """Flat-buffer train step (DESIGN.md §6/§9): one (G, Np) f32 buffer
+    per state part, donated so XLA updates the model in place across the
+    T-step round. When the mesh has an in-group axis ("model"/"fsdp" > 1)
+    the buffer shards over it via a chunk-aligned ShardedLayout and the
+    fused-update + codec kernels run inside shard_map on the local shards
+    (shardexec); otherwise the buffer is replicated within a group and the
+    update stays one GSPMD-partitioned XLA fusion (impl='pallas' refuses
+    there — see _packed_impl)."""
+    sexec = shx.plan_for(mesh) if mode != "sync" else None
+    impl = _packed_impl(impl, mesh, sexec)
+    opt = optim.get(opt_name, lr, packed=True, impl=impl)
     layout = packing.layout_of(model.abstract())
+    if sexec is not None:
+        layout = packing.shard_layout(layout, sexec.n_shards)
 
     if mode == "sync":
+        # sync-DP keeps the single replicated (N,) buffer: there is no
+        # G axis to pair the shard_map exchange with, and the per-step
+        # gradient all-reduce dominates anyway
         step = lsgd.make_sync_step(model.loss, opt, layout=layout)
         B = shape.global_batch
         batch_abs, bspecs = batch_abstract(cfg, (B,), shape.seq_len, mesh,
@@ -325,30 +386,34 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
             (_ns(mesh, sspecs), _ns(mesh, bspecs)),
             (_ns(mesh, sspecs), None),
             {"mode": "sync", "tokens": B * shape.seq_len, "t_inner": 1,
-             "packed": True, "n_flat": layout.size},
+             "packed": True, "n_flat": layout.size, "impl": impl},
             donate_argnums=(0,))
 
     G = sh.n_groups(mesh)
     assert shape.global_batch % G == 0, (shape.global_batch, G)
     b = shape.global_batch // G
     exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
-                                        staleness)
+                                        staleness, impl=impl)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
     round_ = lsgd.make_local_round(model.loss, opt, lcfg, layout=layout,
-                                   exchange=exchange)
+                                   exchange=exchange, shardexec=sexec)
     dp = sh.dp_axes(mesh)
     buf_G = layout.abstract((G,))
     opt_abs = jax.eval_shape(opt.init, buf_G)
     state_abs = {"params": buf_G, "opt": opt_abs}
     lead = P(dp) if dp else P()
-    sspecs = {"params": lead,
-              "opt": {k: (P() if k == "count" else lead) for k in opt_abs}}
+    buf_spec = sexec.buf_spec() if sexec is not None else lead
+    sspecs = {"params": buf_spec,
+              "opt": {k: (P() if k == "count" else buf_spec)
+                      for k in opt_abs}}
     _add_comm_state(exchange, buf_G, state_abs, sspecs, dp, G,
-                    param_specs=lead)
+                    param_specs=buf_spec)
     batch_abs, bspecs = batch_abstract(cfg, (G, b), shape.seq_len, mesh,
                                        leading_group=True)
+    n_wire = layout.padded       # the buffer IS the wire format, pad incl.
+    m_wire = (len(opt_abs) - 1) * layout.padded if avg_opt else 0
     return BuiltStep(
         round_, (state_abs, batch_abs),
         (_ns(mesh, sspecs), _ns(mesh, bspecs)),
@@ -356,13 +421,18 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         {"mode": "localsgd", "groups": G, "per_group": b,
          "tokens": shape.global_batch * shape.seq_len * t_inner,
          "t_inner": t_inner, "policy": "packed", "packed": True,
-         "n_flat": layout.size, "param_dtype": cfg.param_dtype,
+         "n_flat": layout.size, "n_flat_padded": layout.padded,
+         "sharded": sexec is not None,
+         "n_shards": sexec.n_shards if sexec is not None else 1,
+         "impl": impl, "param_dtype": cfg.param_dtype,
          "comm": exchange.name,
          # packed rounds exchange the moment buffers but never the
          # shared step counter (mirrors _round_wire_bytes)
          "wire_bytes_per_round": exchange.wire_bytes_per_round(
-             layout.size,
-             (len(opt_abs) - 1) * layout.size if avg_opt else 0)},
+             n_wire, m_wire),
+         "wire_bytes_up_per_round": exchange.wire_bytes_up(n_wire, m_wire),
+         "wire_bytes_down_per_round": exchange.wire_bytes_down(
+             n_wire, m_wire)},
         donate_argnums=(0,))
 
 

@@ -64,6 +64,18 @@ def main() -> None:
     ap.add_argument("--packed", action="store_true",
                     help="flat-buffer fast path: fused whole-model updates"
                          " on one (G, N) f32 buffer (see DESIGN.md)")
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="packed update/codec kernels: fused Pallas "
+                         "kernels or the jnp fusion (DESIGN.md §6/§9)")
+    ap.add_argument("--shard", type=int, default=1,
+                    help="in-group shard count S (packed localsgd only): "
+                         "shards the flat buffer over a (G, S) device "
+                         "mesh and runs the fused/codec kernels in "
+                         "shard_map blocks on the local shards "
+                         "(DESIGN.md §9; needs G*S devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     ap.add_argument("--comm", default="server",
                     choices=["server", "ring", "gossip", "async_stale",
                              "none"],
@@ -87,6 +99,11 @@ def main() -> None:
         ap.error("--comm/--codec select the local-SGD model exchange; "
                  "sync-DP all-reduces gradients every step and has no "
                  "exchange to configure")
+    if args.impl != "auto" and not args.packed:
+        ap.error("--impl selects the packed fused kernels; add --packed")
+    if args.shard > 1 and not (args.packed and args.mode == "localsgd"):
+        ap.error("--shard shards the packed flat buffer over a mesh; it "
+                 "needs --packed and --mode localsgd")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -97,8 +114,28 @@ def main() -> None:
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M mode={args.mode}")
 
     layout = packing.layout_of(params) if args.packed else None
-    opt = optim.get(args.opt, args.lr, packed=args.packed)
     G = args.groups
+    mesh, sexec = None, None
+    if args.shard > 1:
+        from jax.sharding import Mesh
+        from repro.sharding import shardexec as shx
+
+        n_dev = G * args.shard
+        devices = jax.devices()
+        if len(devices) < n_dev:
+            raise SystemExit(
+                f"--shard {args.shard} with --groups {G} needs {n_dev} "
+                f"devices, found {len(devices)}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_dev}")
+        mesh = Mesh(np.array(devices[:n_dev]).reshape(G, args.shard),
+                    ("data", "model"))
+        sexec = shx.plan_for(mesh, require=True)
+        layout = packing.shard_layout(layout, sexec.n_shards)
+        print(f"sharded execution: G={G} x {args.shard} shards, "
+              f"buffer {layout.size} -> {layout.padded} padded "
+              f"({layout.shard_size}/shard)")
+    opt = optim.get(args.opt, args.lr, packed=args.packed,
+                    **({"impl": args.impl} if args.packed else {}))
     pipe = TokenPipeline(cfg.vocab_size, args.seq, seed=args.seed)
     rng = np.random.RandomState(args.seed)
 
@@ -130,7 +167,8 @@ def main() -> None:
         metrics = "traj" if args.adaptive_t else "final"
         exchange = comm_mod.get_exchange(
             args.comm, args.codec, G, mix_rounds=args.mix_rounds,
-            staleness=args.staleness)
+            staleness=args.staleness,
+            impl=args.impl if args.packed else "auto")
         # e.g. async_stale keeps staleness buffers for the params only
         avg_opt = exchange.supports_opt_state_averaging
         lcfg = lsgd.LocalSGDConfig(
@@ -139,10 +177,23 @@ def main() -> None:
             average_opt_state=avg_opt)
         rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg,
                                             layout=layout,
-                                            exchange=exchange),
+                                            exchange=exchange,
+                                            shardexec=sexec),
                       donate_argnums=(0,))
         state = lsgd.init_state(params, opt, n_groups=G, layout=layout,
                                 exchange=exchange)
+        if sexec is not None:
+            # place the buffers on the mesh once; donation keeps every
+            # subsequent round's state resident in place
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            buf_sh = NamedSharding(mesh, sexec.buf_spec())
+            rep_sh = NamedSharding(mesh, P())
+            state = jax.tree.map(
+                lambda x: jax.device_put(
+                    x, buf_sh if (x.ndim == 2
+                                  and x.shape[-1] == layout.padded)
+                    else rep_sh), state)
         batches = pipe.batches((G, args.per_group))
         ctl = AdaptiveT(r=args.cost_ratio) if args.adaptive_t else None
         t_cur = args.t_inner
@@ -157,7 +208,8 @@ def main() -> None:
                     metrics=metrics, average_opt_state=avg_opt)
                 rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg,
                                                     layout=layout,
-                                                    exchange=exchange),
+                                                    exchange=exchange,
+                                                    shardexec=sexec),
                               donate_argnums=(0,))
             state, m = rnd(state, batch)
             if ctl is not None and "grad_sq_traj" in m:

@@ -289,4 +289,11 @@ def get(name: str, lr: float, *, packed: bool = False, **kw) -> Optimizer:
     if name not in table:
         raise ValueError(f"unknown optimizer {name!r} (have {sorted(table)}"
                          f", packed={packed})")
+    if not packed and "impl" in kw:
+        # a clear refusal, not a TypeError (and never a silent fallback):
+        # the fused Pallas kernels exist only on the flat-buffer path
+        raise ValueError(
+            f"impl={kw['impl']!r} selects the fused-kernel path, which "
+            "only exists for packed optimizers — pass packed=True (the "
+            "pytree optimizers have no Pallas implementation)")
     return table[name](lr, **kw)

@@ -40,10 +40,57 @@ class Layout:
     sizes: Tuple[int, ...]
     size: int                      # total number of f32 elements
 
+    @property
+    def padded(self) -> int:
+        """Buffer length including trailing zero padding (== size here;
+        ShardedLayout pads to a shard/chunk multiple)."""
+        return self.size
+
     def abstract(self, leading: Tuple[int, ...] = ()):
         """ShapeDtypeStruct of the packed buffer (with leading axes)."""
-        return jax.ShapeDtypeStruct(tuple(leading) + (self.size,),
+        return jax.ShapeDtypeStruct(tuple(leading) + (self.padded,),
                                     jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLayout(Layout):
+    """Shard-aware Layout (DESIGN.md §9): the buffer is zero-padded to
+    ``pad_to`` — a multiple of ``n_shards * align`` — so it splits evenly
+    into ``n_shards`` equal in-group shards AND every shard holds whole
+    ``align``-element codec chunks (int8 per-chunk scales stay shard-local;
+    no scale ever straddles a device boundary).
+
+    The padding is invisible to ``unpack`` (static slices stop at ``size``)
+    and inert under every packed optimizer: zero params with zero grads and
+    zero moments stay exactly zero through sgd/momentum/adamw, quantize to
+    zero, and average to zero — so the pad region never leaks into real
+    elements."""
+    n_shards: int = 1
+    align: int = 1
+    pad_to: int = 0
+
+    @property
+    def padded(self) -> int:
+        return self.pad_to
+
+    @property
+    def shard_size(self) -> int:
+        return self.pad_to // self.n_shards
+
+
+def shard_layout(layout: Layout, n_shards: int,
+                 align: int = 256) -> ShardedLayout:
+    """Pad a Layout for ``n_shards``-way in-group sharding.
+
+    align: chunk quantum every shard must hold whole multiples of —
+    defaults to the int8 codec's chunk (256) so the SAME padded geometry
+    serves every codec (the few KiB of zero pad is noise next to N)."""
+    assert n_shards >= 1 and align >= 1, (n_shards, align)
+    q = n_shards * align
+    pad_to = q * ((layout.size + q - 1) // q)
+    return ShardedLayout(layout.treedef, layout.shapes, layout.dtypes,
+                         layout.offsets, layout.sizes, layout.size,
+                         n_shards=n_shards, align=align, pad_to=pad_to)
 
 
 def layout_of(tree) -> Layout:
@@ -66,7 +113,11 @@ def pack(tree, layout: Layout) -> jax.Array:
     leaves = layout.treedef.flatten_up_to(tree)
     lead = leaves[0].shape[:leaves[0].ndim - len(layout.shapes[0])]
     flat = [l.reshape(lead + (-1,)).astype(jnp.float32) for l in leaves]
-    return jnp.concatenate(flat, axis=-1)
+    buf = jnp.concatenate(flat, axis=-1)
+    pad = layout.padded - layout.size
+    if pad:
+        buf = jnp.pad(buf, [(0, 0)] * (buf.ndim - 1) + [(0, pad)])
+    return buf
 
 
 def unpack(buf: jax.Array, layout: Layout):

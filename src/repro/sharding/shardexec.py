@@ -1,0 +1,290 @@
+"""shard_map execution layer for the packed round (DESIGN.md §9).
+
+The flat-buffer engine (§6) runs the T-step hot path as fused whole-buffer
+passes, but under GSPMD the Pallas kernels are not partitionable — a
+``pallas_call`` over a sharded operand silently all-gathers it — so the
+mesh builders used to pin ``impl="jnp"`` AND replicate the packed buffer
+within each group. This module removes both limits: the buffer shards over
+the in-group mesh axes (``"fsdp"``/``"model"``) via a chunk-aligned
+``packing.ShardedLayout``, and the fused optimizer kernels, the int8
+quantize/dequantize codec kernels, and the ``sq_norm`` metric reduction
+run inside ``jax.shard_map`` blocks on each device's LOCAL shard.
+
+Mapping (one ``ShardExec`` per mesh):
+
+* state buffers ``(G, Np)`` carry spec ``P(group_axes, shard_axes)`` —
+  one group per slice of the slow axes, ``Np/n_shards`` elements per
+  device inside the group;
+* the per-step optimizer update is ``shard_map(opt.step)`` — element-wise,
+  zero collectives;
+* the group exchange routes through ``comm.Exchange`` semantics expressed
+  with collectives: server/async mean = ``psum`` over the group axes,
+  ring/gossip = per-hop ``all_gather`` + this group's row of the mixing
+  matrix (with per-hop recompression, matching the replicated path);
+* metric ``||g||²`` = shard-local ``sq_norm`` + ``psum`` over shard axes.
+
+Parity contract (tests/test_shardexec.py): sharded packed rounds match the
+replicated path on the SAME ``ShardedLayout`` to fp32 tolerance for
+sgd/momentum/adamw × server/ring × fp32/int8 — int8 exactly, because the
+stochastic-rounding noise is generated OUTSIDE the shard_map block at the
+full rows shape (``Codec.noise``) and each device consumes its own slice.
+
+Refused here (use the replicated path): ``topk`` (global per-group
+selection + a residual that error feedback must update consistently —
+shard-local top-k would change the payload).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim import packing
+
+# in-group axes a packed buffer may shard over, major-to-minor — must stay
+# consistent everywhere a buffer spec is built
+SHARD_AXES = ("fsdp", "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardExec:
+    """Static plan: which mesh axes carry groups vs in-group shards."""
+    mesh: Mesh
+    group_axes: Tuple[str, ...]    # the local-SGD G axis (pod/data)
+    shard_axes: Tuple[str, ...]    # in-group buffer axes (fsdp/model)
+
+    @property
+    def n_shards(self) -> int:
+        n = 1
+        for a in self.shard_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def n_groups(self) -> int:
+        n = 1
+        for a in self.group_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def _entry(self, axes):
+        return axes[0] if len(axes) == 1 else tuple(axes)
+
+    def buf_spec(self) -> P:
+        """Spec for a (G, Np) packed buffer: groups over the slow axes,
+        the flat model axis over the in-group shard axes."""
+        return P(self._entry(self.group_axes), self._entry(self.shard_axes))
+
+    def group_spec(self) -> P:
+        """Spec for per-group scalars/vectors of leading dim G."""
+        return P(self._entry(self.group_axes))
+
+    def check_layout(self, layout: packing.Layout, chunk: int = 0) -> None:
+        if not isinstance(layout, packing.ShardedLayout):
+            raise ValueError(
+                "sharded execution needs a packing.ShardedLayout "
+                "(packing.shard_layout(layout, n_shards)) — got a plain "
+                "Layout whose buffer does not split into shards")
+        if layout.n_shards != self.n_shards:
+            raise ValueError(
+                f"layout sharded {layout.n_shards}-way but the mesh's "
+                f"in-group axes {self.shard_axes} hold {self.n_shards} "
+                "devices")
+        if chunk and layout.shard_size % chunk:
+            raise ValueError(
+                f"shard size {layout.shard_size} is not a multiple of the "
+                f"codec chunk {chunk}; build the layout with "
+                f"packing.shard_layout(..., align={chunk}) so per-chunk "
+                "scales stay shard-local")
+
+    def _gidx(self):
+        """Linear group index of this device, matching how the G axis
+        flattens over ``group_axes`` in the buffer spec (major-to-minor)."""
+        idx = jnp.zeros((), jnp.int32)
+        for a in self.group_axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    # -- fused optimizer update -------------------------------------------
+
+    def opt_step(self, opt):
+        """shard_map-wrapped ``opt.step`` on (G, Np) buffers: each device
+        updates its (1, shard) block with the real fused kernel (or the
+        jnp fusion); the scalar step counter rides replicated."""
+        spec = self.buf_spec()
+
+        def step(buf_G, grads_G, opt_state):
+            sspec = {k: (P() if k == "count" else spec) for k in opt_state}
+            f = shard_map(opt.step, mesh=self.mesh,
+                          in_specs=(spec, spec, sspec),
+                          out_specs=(spec, sspec), check_rep=False)
+            return f(buf_G, grads_G, opt_state)
+
+        return step
+
+    # -- metrics -----------------------------------------------------------
+
+    def sq_norm_groups(self, use_pallas: bool):
+        """Per-group ||g||² of a (G, Np) buffer: shard-local reduction
+        (Pallas sq_norm kernel or one jnp fusion) + psum over the shard
+        axes -> (G,)."""
+        spec = self.buf_spec()
+        sax = self._entry(self.shard_axes)
+
+        def local(g):
+            if use_pallas:
+                from repro.kernels import use_interpret
+                from repro.kernels.sq_norm import sq_norm_groups
+                part = sq_norm_groups(g, interpret=use_interpret())
+            else:
+                part = jnp.sum(jnp.square(g.astype(jnp.float32)), axis=-1)
+            return jax.lax.psum(part, sax)
+
+        return shard_map(local, mesh=self.mesh, in_specs=(spec,),
+                         out_specs=self.group_spec(), check_rep=False)
+
+    # -- codec-free mixing (opt-state moments) ----------------------------
+
+    def mix(self, exch):
+        """Sharded ``Exchange.mix`` for ONE (G, Np) buffer: psum-mean for
+        server/async, k hops of all_gather + this group's W row for
+        ring/gossip (moments ride codec-free at fp32, DESIGN.md §8)."""
+        if exch.topology == "none":
+            return lambda x: x
+        spec = self.buf_spec()
+        gax = self._entry(self.group_axes)
+        w = None if exch.w is None else jnp.asarray(exch.w, jnp.float32)
+
+        def local(x):
+            if w is None:
+                return jax.lax.pmean(x, gax)
+            y = x
+            for _ in range(exch.mix_rounds):
+                y = self._mix_hop(y, w, gax)
+            return y
+
+        return shard_map(local, mesh=self.mesh, in_specs=(spec,),
+                         out_specs=spec, check_rep=False)
+
+    def _mix_hop(self, y, w, gax):
+        """One W hop on a local (1, shard) block: gather the G neighbor
+        blocks for THIS shard range, weight by this group's W row."""
+        full = jax.lax.all_gather(y, gax, axis=0, tiled=True)   # (G, shard)
+        row = jnp.take(w, self._gidx(), axis=0)                 # (G,)
+        return jnp.tensordot(row, full, axes=[[0], [0]])[None]
+
+    # -- the communication step -------------------------------------------
+
+    def exchange(self, exch, layout: packing.Layout):
+        """shard_map'd ``Exchange.params``: (x_G, x0_G, comm_state) ->
+        (mixed_x_G, new_comm_state), semantics-matched to the replicated
+        path (incl. per-hop recompression for decentralized lossy rounds).
+        Codec handling on the local shard:
+
+        * fp32 / topology "none": no codec work (bit-exact semantics),
+        * fp16/bf16: element-wise cast on the local block (identical
+          values to the replicated path by construction),
+        * int8: noise generated OUTSIDE at the full rows shape via
+          ``Codec.noise`` — per-chunk scales and rounding bits match the
+          replicated path bit-for-bit on every shard,
+        * topk: refused (global per-group selection; see module doc).
+        """
+        codec = exch.codec
+        if not codec.shardable:
+            raise NotImplementedError(
+                f"codec {codec.name!r} is not shardable: its payload is a "
+                "global per-group selection with an error-feedback "
+                "residual — run it on the replicated path (DESIGN.md §9)")
+        lossy = (not codec.identity) and exch.topology != "none"
+        chunked = lossy and codec.chunk > 0
+        if chunked:
+            self.check_layout(layout, codec.chunk)
+        else:
+            self.check_layout(layout)
+        hops = exch.mix_rounds if exch.w is not None else 1
+        n_compress = hops if (lossy and exch.w is not None) else (
+            1 if lossy else 0)
+        spec = self.buf_spec()
+        gax = self._entry(self.group_axes)
+        sax = self._entry(self.shard_axes)
+        w = None if exch.w is None else jnp.asarray(exch.w, jnp.float32)
+        G = self.n_groups
+        chunk = codec.chunk
+
+        def compress_local(y, ref, u):
+            d = y - ref
+            if chunked:
+                rows = d.reshape(-1, chunk)
+                out = codec.compress_rows(rows, u.reshape(rows.shape))
+                return ref + out.reshape(d.shape)
+            d_hat, _ = codec.compress(d, {})
+            return ref + d_hat
+
+        def local(x, x0, us, pushed, rnd):
+            if w is not None:                      # ring / gossip
+                y, ref = x, x0
+                for h in range(hops):
+                    if lossy:
+                        y = compress_local(y, ref, us[h] if chunked
+                                           else None)
+                        ref = y
+                    y = self._mix_hop(y, w, gax)
+                return y, pushed
+            y = compress_local(x, x0, us[0] if chunked else None) \
+                if lossy else x
+            if exch.topology == "async_stale":
+                keep = ((self._gidx() + rnd) % (exch.staleness + 1)) == 0
+                pushed = jnp.where(keep, y, pushed)
+                return jax.lax.pmean(pushed, gax), pushed
+            if exch.topology == "none":
+                return y, pushed
+            return jax.lax.pmean(y, gax), pushed   # server
+
+        def fn(x_G, x0_G, comm_state):
+            new_state = dict(comm_state)
+            us = jnp.zeros((1, 1), jnp.float32)    # placeholder
+            us_spec = P(None, None)
+            if chunked:
+                cnt = comm_state["codec"]["count"]
+                rows_shape = (G * layout.padded // chunk, chunk)
+                us = jnp.stack([codec.noise(cnt + h, rows_shape)
+                                .reshape(G, -1, chunk)
+                                for h in range(n_compress)])
+                us_spec = P(None, self._entry(self.group_axes), sax, None)
+                new_state["codec"] = {"count": cnt + n_compress}
+            pushed = comm_state.get("pushed", jnp.zeros((1, 1), jnp.float32))
+            pushed_spec = spec if "pushed" in comm_state else P(None, None)
+            rnd = comm_state.get("round", jnp.zeros((), jnp.int32))
+            x0 = x0_G if lossy else x_G            # unused when not lossy
+            f = shard_map(local, mesh=self.mesh,
+                          in_specs=(spec, spec, us_spec, pushed_spec, P()),
+                          out_specs=(spec, pushed_spec), check_rep=False)
+            mixed, new_pushed = f(x_G, x0, us, pushed, rnd)
+            if exch.topology == "async_stale":
+                new_state["pushed"] = new_pushed
+                new_state["round"] = rnd + 1
+            return mixed, new_state
+
+        return fn
+
+
+def plan_for(mesh: Mesh, require: bool = False) -> Optional[ShardExec]:
+    """The mesh's sharded-execution plan, or None when no in-group axis
+    has more than one device (the replicated path is then both correct
+    and free — nothing to shard over)."""
+    shard_axes = tuple(a for a in SHARD_AXES
+                       if a in mesh.axis_names and mesh.shape[a] > 1)
+    if not shard_axes:
+        if require:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has no in-group axis "
+                f"({'/'.join(SHARD_AXES)}) larger than 1 to shard the "
+                "packed buffer over")
+        return None
+    group_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return ShardExec(mesh=mesh, group_axes=group_axes,
+                     shard_axes=shard_axes)

@@ -257,6 +257,54 @@ def test_decentralized_exchange_preserves_mean(topology, key):
     assert float(jnp.abs(near - jnp.mean(x, 0)).max()) < 1e-3
 
 
+def test_decentral_lossy_recompresses_per_hop(key):
+    """Multi-hop ring/gossip applies the codec at EVERY mixing hop (each
+    hop's payload is a fresh wire transmission — the byte accounting
+    always counted per hop; the noise model now matches): the int8 rng
+    counter advances once per hop, and error feedback (top-k residual)
+    updates per hop while its exact accounting identity still closes over
+    the whole round."""
+    k = 3
+    ex = comm.get_exchange("ring", "int8", 8, mix_rounds=k)
+    x0 = jnp.zeros((8, 512))
+    x = jax.random.normal(key, (8, 512)) * 0.1
+    state = ex.init(x0)
+    _, state = ex.params(x, x0, state)
+    assert int(state["codec"]["count"]) == k      # one compress per hop
+    # top-k per-hop error feedback: after the round, delta-minus-residual
+    # equals the sum of everything transmitted (nothing lost, only delayed)
+    ex_t = comm.get_exchange("ring", "topk", 8, mix_rounds=2,
+                             topk_frac=0.1)
+    state_t = ex_t.init(x0)
+    out_t, state_t = ex_t.params(x, x0, state_t)
+    assert bool(jnp.all(jnp.isfinite(state_t["codec"]["residual"])))
+    # mean preservation still holds under per-hop top-k: the mixing is
+    # doubly stochastic over the DECODED payloads, so the output mean is
+    # the input mean minus exactly what still sits in the residual
+    want = jnp.mean(x - state_t["codec"]["residual"], axis=0)
+    np.testing.assert_allclose(jnp.mean(out_t, 0), want,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("codec", ["int8", "topk"])
+def test_per_hop_codec_consensus_contracts(codec, key):
+    """The ROADMAP follow-up check: with the codec applied at every hop,
+    repeated mixing still CONTRACTS disagreement (the per-hop noise is
+    bounded by the per-chunk scale / absorbed by error feedback, so it
+    cannot undo the spectral-gap contraction at these magnitudes)."""
+    m, k = 8, 4
+    ex = comm.get_exchange("ring", codec, m, mix_rounds=k, topk_frac=0.25)
+    x0 = jnp.zeros((m, 512))
+    x = jax.random.normal(key, (m, 512))
+    state = ex.init(x0)
+    out, _ = ex.params(x, x0, state)
+    dis_in = float(jnp.abs(x - jnp.mean(x, 0)).max())
+    dis_out = float(jnp.abs(out - jnp.mean(out, 0)).max())
+    # ring(8): |lambda_2| ~ 0.80 -> 4 hops contract to ~0.42; leave head-
+    # room for codec noise but require a real contraction
+    assert dis_out < 0.7 * dis_in, (codec, dis_in, dis_out)
+
+
 def test_async_stale_s0_equals_server(key):
     ex0 = comm.get_exchange("async_stale", "fp32", G, staleness=0)
     x = jax.random.normal(key, (G, 11))
@@ -297,17 +345,30 @@ def test_wire_bytes_accounting():
     }
     for (topo, codec), want in cases.items():
         ex = comm.get_exchange(topo, codec, G)
-        assert ex.wire_bytes_per_round(n) == want, (topo, codec)
-    # ring: one payload per directed edge per hop (G=4 ring: 8 edges)
+        assert ex.wire_bytes_up(n) == want, (topo, codec)
+        # server broadcast: every group also PULLS the new average at the
+        # same codec width; none has no wire at all
+        assert ex.wire_bytes_down(n) == want, (topo, codec)
+        assert ex.wire_bytes_per_round(n) == 2 * want, (topo, codec)
+    # ring: one payload per directed edge per hop (G=4 ring: 8 edges);
+    # peer-to-peer symmetry — every edge payload is one node's uplink and
+    # its neighbor's downlink, i.e. the SAME transmission seen from both
+    # endpoints: the total counts it once (no double-counting)
     ex = comm.get_exchange("ring", "fp32", G, mix_rounds=3)
-    assert ex.wire_bytes_per_round(n) == 8 * 3 * 4 * n
-    # async s=1: half the groups push per round (amortized)
+    assert ex.wire_bytes_up(n) == 8 * 3 * 4 * n
+    assert ex.wire_bytes_down(n) == ex.wire_bytes_up(n)
+    assert ex.wire_bytes_per_round(n) == ex.wire_bytes_up(n)
+    # async s=1: half the groups push per round (amortized), and the
+    # downlink answers each push with the fresh average (pull-on-push)
     ex = comm.get_exchange("async_stale", "fp32", G, staleness=1)
-    assert ex.wire_bytes_per_round(n) == G // 2 * 4 * n
+    assert ex.wire_bytes_up(n) == G // 2 * 4 * n
+    assert ex.wire_bytes_down(n) == G // 2 * 4 * n
     # moment buffers ride at fp32 width
     ex = comm.get_exchange("server", "int8", G)
-    assert ex.wire_bytes_per_round(n, moment_elems=2 * n) == \
+    assert ex.wire_bytes_up(n, moment_elems=2 * n) == \
         G * ((n + 16) + 4 * 2 * n)
+    assert ex.wire_bytes_per_round(n, moment_elems=2 * n) == \
+        2 * G * ((n + 16) + 4 * 2 * n)
 
 
 def test_round_metrics_report_wire_bytes(key):
@@ -324,12 +385,17 @@ def test_round_metrics_report_wire_bytes(key):
     _, m = rnd(st, batch)
     # adamw: m and v buffers averaged at fp32; count not exchanged
     assert int(m["wire_bytes"]) == ex.wire_bytes_per_round(n, 2 * n)
+    assert int(m["wire_bytes_up"]) == ex.wire_bytes_up(n, 2 * n)
+    assert int(m["wire_bytes_down"]) == ex.wire_bytes_down(n, 2 * n)
+    assert int(m["wire_bytes"]) == (int(m["wire_bytes_up"])
+                                    + int(m["wire_bytes_down"]))
     # pytree path: the moment leaves count, the counter never does
-    # (it is not exchanged on either path)
+    # (it is not exchanged on either path); server up == down
     opt_t = optim.momentum(0.05)
     rnd_t = jax.jit(lsgd.make_local_round(quad_loss, opt_t, cfg))
     _, mt = rnd_t(lsgd.init_state(params, opt_t, n_groups=G), batch)
-    assert int(mt["wire_bytes"]) == 4 * G * (n + n)
+    assert int(mt["wire_bytes_up"]) == 4 * G * (n + n)
+    assert int(mt["wire_bytes"]) == 2 * 4 * G * (n + n)
 
 
 def test_pytree_counts_stay_lockstep_under_mixing(key):

@@ -249,7 +249,8 @@ def test_final_metrics_contract(key):
                                         layout=layout))
     sp = lsgd.init_state(params, opt_p, n_groups=G, layout=layout)
     new_sp, m = rnd(sp, batch)
-    assert set(m) == {"loss", "inner_steps", "grad_sq", "wire_bytes"}
+    assert set(m) == {"loss", "inner_steps", "grad_sq", "wire_bytes",
+                      "wire_bytes_up", "wire_bytes_down"}
     # the traj round reports the gradient made AT step T-1; final mode is
     # one descent update later, so on this convex problem it must be <=
     cfg_traj = dataclasses.replace(cfg, metrics="traj")
