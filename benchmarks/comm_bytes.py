@@ -15,10 +15,19 @@ analysis. Two experiments, both through the packed round engine:
   fig2    the paper's Fig-2(a) Beck-Teboulle feasibility re-run with the
           fp32 and int8 wire: the log-log slope of ||grad f(x_n)||^2 and
           the final residual must survive quantized communication.
+  moments the multi-stream frontier (DESIGN.md §10): momentum/adamw x
+          moment codec at T=16 with params pinned to int8 — for adamw
+          the wire is DOMINATED by the two fp32 moment buffers, so the
+          moment codec is the biggest remaining lever. Convergence bars:
+          momentum must converge absolutely; adamw reaches its
+          optimizer floor (~lr^2) and every lossy moment codec must
+          match the moments-fp32 row within 2x.
 
 Headline (the acceptance bar): server topology, T=16 — int8 wire bytes
 >= 3.5x under fp32 AND int8 converges to the same tolerance; fig2 keeps
-slope < -0.5 and gsq_last < 1e-6 under int8.
+slope < -0.5 and gsq_last < 1e-6 under int8; adamw params-int8 +
+moments-int8 cuts >= 2.5x total wire vs params-int8/moments-fp32 with
+convergence preserved.
 
 Writes experiments/bench/comm_bytes.json and the committed
 perf-trajectory artifact BENCH_comm_bytes.json on full runs.
@@ -80,9 +89,7 @@ def make_feasibility(seed: int = 0, rows: int = 20):
 def run_cell(params, batch, layout, topology: str, codec: str, t_inner: int,
              rounds: int, gsq_tol: float = GSQ_TOL) -> dict:
     ex = comm_mod.get_exchange(topology, codec, G, staleness=1)
-    cfg = lsgd.LocalSGDConfig(
-        n_groups=G, inner_steps=t_inner,
-        average_opt_state=topology != "async_stale")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner)
     opt = optim.packed("sgd", LR, impl="jnp")
     rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
                                         exchange=ex))
@@ -103,6 +110,54 @@ def run_cell(params, batch, layout, topology: str, codec: str, t_inner: int,
         "loss_final": float(jnp.mean(m["loss"])),
         "converged": bool(gsq < gsq_tol),
         "rounds": rounds,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream sweep: momentum/adamw x moment codec (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# convergence: momentum reaches the feasibility point absolutely (like
+# sgd); adamw's constant-lr steady state oscillates at ~lr^2, so its bar
+# is the optimizer floor PLUS staying within 2x of its moments-fp32 row
+MOMENT_OPTS = {"momentum": {"lr": 0.04, "rounds": 120, "tol": 1e-10},
+               "adamw": {"lr": 0.02, "rounds": 400, "tol": 1e-2}}
+MOMENT_OPTS_SMOKE = {"momentum": {"lr": 0.04, "rounds": 15, "tol": 1e-1},
+                     "adamw": {"lr": 0.02, "rounds": 15, "tol": 1e0}}
+
+
+def run_moment_cell(params, batch, layout, opt_name: str,
+                    moment_codec: str, t_inner: int, lr: float,
+                    rounds: int, tol: float) -> dict:
+    """One cell of the moments frontier: params pinned to int8 (the §8
+    result), moments through ``moment_codec`` — per-stream wire bytes
+    from the round metrics, checked against the static accounting."""
+    ex = comm_mod.get_exchange("server", "int8", G,
+                               moment_codec=moment_codec)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner)
+    opt = optim.packed(opt_name, lr, impl="jnp")
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    state = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                            exchange=ex)
+    m = None
+    for _ in range(rounds):
+        state, m = rnd(state, batch)
+    moment_sizes = {k: layout.padded for k in opt.moment_keys}
+    by_stream = ex.wire_bytes_by_stream(layout.padded, moment_sizes)
+    wire = int(m["wire_bytes"])
+    assert wire == sum(by_stream.values()), (wire, by_stream)
+    for k, v in by_stream.items():
+        assert int(m[f"wire_bytes/{k}"]) == v, (k, v)
+    gsq = float(jnp.mean(m["grad_sq"]))
+    return {
+        "wire_bytes_per_round": wire,
+        "wire_bytes_by_stream": by_stream,
+        "moment_bytes_per_round": wire - by_stream["params"],
+        "gsq_final": gsq,
+        "loss_final": float(jnp.mean(m["loss"])),
+        "converged": bool(gsq < tol),
+        "rounds": rounds, "lr": lr,
     }
 
 
@@ -199,21 +254,58 @@ def main() -> dict:
               f"gsq_last {r['gsq_last']:.2e} "
               f"{'ok' if r['pass'] else '--'}", flush=True)
 
+    # ---- multi-stream frontier: moment codecs (DESIGN.md §10) ----------
+    mopts = MOMENT_OPTS_SMOKE if smoke else MOMENT_OPTS
+    mcodecs = ["fp32", "int8"] if smoke else ["fp32", "bf16", "int8"]
+    moments = {}
+    for opt_name, hp in mopts.items():
+        for mc in mcodecs:
+            cell = run_moment_cell(params, batch, layout, opt_name, mc,
+                                   t_head, hp["lr"], hp["rounds"],
+                                   hp["tol"])
+            moments[f"server/{opt_name}/params-int8/moments-{mc}"] = cell
+            print(f"  {opt_name:9s} moments={mc:5s} T={t_head:<3d} "
+                  f"wire {cell['wire_bytes_per_round']:>6,}B/round "
+                  f"(moments {cell['moment_bytes_per_round']:>6,}B) "
+                  f"gsq {cell['gsq_final']:.2e} "
+                  f"{'ok' if cell['converged'] else '--'}", flush=True)
+    a_fp32 = moments["server/adamw/params-int8/moments-fp32"]
+    a_i8 = moments["server/adamw/params-int8/moments-int8"]
+    moment_reduction = (a_fp32["wire_bytes_per_round"]
+                        / a_i8["wire_bytes_per_round"])
+    # EVERY swept moment cell must converge (momentum absolutely, adamw
+    # to its optimizer floor), and every lossy adamw row — bf16 included
+    # — must match the moments-fp32 floor within 2x
+    moments_ok = bool(
+        all(c["converged"] for c in moments.values())
+        and all(moments[f"server/adamw/params-int8/moments-{mc}"]
+                ["gsq_final"] <= 2.0 * max(a_fp32["gsq_final"], 1e-12)
+                for mc in mcodecs if mc != "fp32"))
+
     payload = {
         "G": G, "dim": D, "lr": LR, "gsq_tol": gsq_tol,
         "problem": "consistent least squares over G nodes (Sec 2.3 "
                    "feasibility geometry); fig2 = Beck-Teboulle, T=10",
-        "accounting": "uplink-only exact payload bytes "
-                      "(Exchange.wire_bytes_per_round, DESIGN.md §8)",
+        "accounting": "exact per-stream payload bytes, up+down totals "
+                      "(Exchange.wire_bytes_by_stream, DESIGN.md §8/§10)",
         "sweep": sweep,
         "fig2": fig2,
+        "moments": moments,
         "headline": {
             "topology": "server", "T": t_head,
             "int8_reduction_vs_fp32": reduction, "bar": 3.5,
             "fp32_gsq": fp32["gsq_final"], "int8_gsq": i8["gsq_final"],
         },
+        "headline_moments": {
+            "topology": "server", "T": t_head, "opt": "adamw",
+            "int8_moments_reduction_vs_fp32_moments": moment_reduction,
+            "bar": 2.5,
+            "fp32_moments_gsq": a_fp32["gsq_final"],
+            "int8_moments_gsq": a_i8["gsq_final"],
+        },
         "pass": bool(reduction >= 3.5 and fp32["converged"]
-                     and i8["converged"] and fig2["int8"]["pass"]),
+                     and i8["converged"] and fig2["int8"]["pass"]
+                     and moment_reduction >= 2.5 and moments_ok),
         "backend": jax.default_backend(),
         "smoke": smoke,
     }

@@ -77,10 +77,35 @@ def demo_measured_comm(n_model: int = 1_000_000, step_time_s: float = 2e-6):
         demo(f"quadratic ({codec} wire)", power=1, lr=1.0, ctl=ctl)
 
 
+def demo_moment_codec(n_model: int = 1_000_000, step_time_s: float = 2e-6):
+    """Stream-resolved r (DESIGN.md §10): with adamw the payload is
+    params + TWO moment buffers, so the wire is dominated by the moments
+    — compressing the params alone (the pre-§10 state: moments pinned at
+    fp32) buys little. ``AdaptiveT.from_exchange`` prices the whole
+    multi-stream payload through the per-stream codec policy, so the
+    measured r now reflects the moment codec too."""
+    print(f"-- stream-resolved r: adamw (m+v ride), {n_model/1e6:.0f}M "
+          f"params, step {step_time_s*1e6:.1f}us --")
+    moment_sizes = {"m": n_model, "v": n_model}
+    for codec, mcodec in (("fp32", "fp32"), ("int8", "fp32"),
+                          ("int8", "int8")):
+        ex = comm_mod.get_exchange("server", codec, n_groups=2,
+                                   moment_codec=mcodec)
+        ctl = AdaptiveT.from_exchange(step_time_s, ex, n_model,
+                                      moment_sizes, ema=0.3)
+        by = ex.wire_bytes_by_stream(n_model, moment_sizes)
+        print(f"   params={codec:5s} moments={mcodec:5s}: "
+              f"{sum(by.values()):,} wire B/round "
+              f"(params {by['params']:,} + moments "
+              f"{by['m'] + by['v']:,}) -> r = {ctl.r:.4g}")
+        demo(f"quadratic ({ex.name} wire)", power=1, lr=1.0, ctl=ctl)
+
+
 def main():
     demo("quadratic", power=1, lr=1.0, r=0.01)
     demo("quartic", power=2, lr=0.5, r=0.01)
     demo_measured_comm()
+    demo_moment_codec()
 
 
 if __name__ == "__main__":

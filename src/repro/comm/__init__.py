@@ -3,9 +3,10 @@
 The paper's claim is about communication: T local steps amortize ONE model
 exchange per round. This package makes that exchange a first-class layer —
 topologies (server / ring / gossip / async_stale), flat-buffer wire codecs
-(fp32 / fp16 / bf16 / int8 / topk), and exact per-round wire-byte
-accounting — behind the ``Exchange`` protocol that ``core.localsgd`` routes
-both its pytree and packed rounds through.
+(fp32 / fp16 / bf16 / int8 / topk) applied PER STREAM of the payload
+(params + optimizer moments, DESIGN.md §10), and exact per-round
+per-stream wire-byte accounting — behind the ``Exchange`` protocol that
+``core.localsgd`` routes both its pytree and packed rounds through.
 """
 from repro.comm.codecs import CODECS, Codec, get_codec
 from repro.comm.exchange import (TOPOLOGIES, Exchange, default_exchange,

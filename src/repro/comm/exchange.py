@@ -2,8 +2,8 @@
 
 An ``Exchange`` is the round's communication step — the thing that was a
 hard-coded ``average_groups`` mean before this subsystem existed. It
-composes a TOPOLOGY (who talks to whom) with a CODEC (what goes on the
-wire) and reports exact per-round wire bytes:
+composes a TOPOLOGY (who talks to whom) with a per-stream CODEC policy
+(what goes on the wire) and reports exact per-round wire bytes:
 
   server       star topology: mean over G + broadcast back. With the fp32
                codec this is the SAME ops as the pre-comm
@@ -20,6 +20,16 @@ wire) and reports exact per-round wire bytes:
   none         no communication (W = I, zero wire bytes) — the
                disconnected baseline for ablations and parity tests.
 
+The round's payload is MULTI-STREAM (DESIGN.md §10): the ``params``
+stream plus one stream per optimizer moment buffer (momentum ``mu``,
+adamw ``m``/``v``) when the round averages opt state. ``codec`` applies
+to the params stream, ``moment_codec`` to every moment stream; each
+stream keeps its OWN codec state (rng counter / error-feedback residual)
+under ``comm_state["codec"][stream]`` and — for async_stale — its own
+staleness buffer (params under ``"pushed"``, moments under
+``"pushed_opt"][stream]``), which is what lifted the old
+``average_opt_state=False`` restriction on async rounds.
+
 All backends preserve the G-mean (doubly-stochastic mixing / exact mean),
 so every topology optimizes the same average objective; they differ in
 consensus speed and wire bytes. Exchanges are frozen dataclasses closed
@@ -30,7 +40,7 @@ buffers, the round counter) lives in the train state under ``"comm"``
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,11 +51,15 @@ from repro.comm import topology as topo_mod
 
 TOPOLOGIES = ("server", "ring", "gossip", "async_stale", "none")
 
+# moment streams default to the uncompressed wire (one shared instance:
+# the identity codec is stateless and pure)
+_FP32 = codecs_mod.fp32()
+
 
 @dataclasses.dataclass(frozen=True)
 class Exchange:
     topology: str
-    codec: codecs_mod.Codec
+    codec: codecs_mod.Codec             # the params stream's codec
     n_groups: int
     mix_rounds: int = 1
     staleness: int = 0
@@ -53,38 +67,70 @@ class Exchange:
     # (server/async) or identity (none) — those paths avoid the matmul so
     # the default stays bit-exact with the pre-comm ``average_groups``.
     w: Optional[np.ndarray] = None
+    # codec for every MOMENT stream (None -> fp32 identity: moments ride
+    # uncompressed, the pre-§10 behavior). topk is refused here — see
+    # ``get_exchange``.
+    moment_codec: Optional[codecs_mod.Codec] = None
+
+    @property
+    def mcodec(self) -> codecs_mod.Codec:
+        return self.moment_codec if self.moment_codec is not None else _FP32
+
+    def stream_codec(self, stream: str) -> codecs_mod.Codec:
+        """The per-stream codec policy: params get ``codec``, every
+        moment stream gets ``moment_codec`` (DESIGN.md §10)."""
+        return self.codec if stream == "params" else self.mcodec
 
     @property
     def name(self) -> str:
-        return f"{self.topology}/{self.codec.name}"
+        base = f"{self.topology}/{self.codec.name}"
+        if not self.mcodec.identity:
+            base += f"+m:{self.mcodec.name}"
+        return base
 
     @property
     def stateful(self) -> bool:
         if self.topology == "none":
-            return False   # no wire: the codec never runs, no state
-        return self.topology == "async_stale" or self.codec.stateful
+            return False   # no wire: the codecs never run, no state
+        return (self.topology == "async_stale" or self.codec.stateful
+                or self.mcodec.stateful)
 
     @property
     def supports_opt_state_averaging(self) -> bool:
-        """async_stale keeps its staleness buffer for params only, so
-        rounds must run with average_opt_state=False (the single source
-        of the rule the launchers and the localsgd guard consult)."""
-        return self.topology != "async_stale"
+        """Always True since the per-stream staleness buffers landed
+        (DESIGN.md §10): async_stale keeps one ``pushed_opt`` buffer per
+        moment stream, so rounds may average opt state on every topology.
+        Kept as a property because the launchers consult it."""
+        return True
 
     # -- state ------------------------------------------------------------
 
-    def init(self, params_G) -> dict:
+    def init(self, params_G, moments: Optional[dict] = None) -> dict:
         """Comm state for a G-grouped params pytree/buffer ({} when the
-        exchange is stateless — the round then carries no "comm" key)."""
-        state = {}
+        exchange is stateless — the round then carries no "comm" key).
+
+        ``moments``: the opt state's moment streams ``{name: value_G}``
+        (same G-leading geometry as the params). Needed whenever the
+        moment codec is stateful or the topology keeps staleness buffers
+        — ``localsgd.init_state`` passes them automatically."""
+        state: dict = {}
         if not self.stateful:
             return state
+        cstate = {}
         if self.codec.stateful:
-            state["codec"] = self.codec.init(params_G)
+            cstate["params"] = self.codec.init(params_G)
+        if moments and self.mcodec.stateful:
+            for k, v in moments.items():
+                cstate[k] = self.mcodec.init(v)
+        if self.codec.stateful or (moments and self.mcodec.stateful):
+            state["codec"] = cstate
         if self.topology == "async_stale":
             # a real COPY: the staleness buffer must not alias the live
             # params (donated train states would double-donate the buffer)
             state["pushed"] = jax.tree.map(jnp.copy, params_G)
+            if moments:
+                state["pushed_opt"] = {
+                    k: jax.tree.map(jnp.copy, v) for k, v in moments.items()}
             state["round"] = jnp.zeros((), jnp.int32)
         return state
 
@@ -112,13 +158,13 @@ class Exchange:
         return y.astype(x.dtype)
 
     def mix(self, tree):
-        """Codec-free mixing over the G axis (opt-state moments follow the
-        topology at full fp32 width — see DESIGN.md §8)."""
+        """Codec-free mixing over the G axis (what an identity-codec
+        stream rides through — see DESIGN.md §8/§10)."""
         return jax.tree.map(self._mix_leaf, tree)
 
     # -- the communication step -------------------------------------------
 
-    def _decentral_lossy(self, x_G, x0_G, cstate):
+    def _decentral_lossy(self, x_G, x0_G, cstate, codec):
         """ring/gossip with a lossy codec: RE-compress at every mixing hop
         (each hop's payload is a fresh wire transmission — the byte
         accounting already counts per hop, and now the noise model does
@@ -131,41 +177,57 @@ class Exchange:
         y, ref = x_G, x0_G
         for _ in range(self.mix_rounds):
             delta = jax.tree.map(lambda a, b: a - b, y, ref)
-            delta_hat, cstate = self.codec.compress(delta, cstate)
+            delta_hat, cstate = codec.compress(delta, cstate)
             y_hat = jax.tree.map(lambda b, d: b + d, ref, delta_hat)
             ref = y_hat
             y = jax.tree.map(lambda v: self._mix_leaf_once(v, w), y_hat)
         return y, cstate
 
-    def params(self, x_G, x0_G, comm_state: dict):
-        """One exchange of the models: ``x_G`` are the post-local-step
-        params (leading G axis), ``x0_G`` the round-start params — the
-        codec reference: lossy codecs transmit the delta ``x_G - x0_G``
-        so quantization error vanishes as rounds converge. Returns
-        ``(mixed_x_G, new_comm_state)``."""
+    def streams(self, xs: dict, xs0: dict, comm_state: dict):
+        """One exchange of the round's MULTI-STREAM payload (DESIGN.md
+        §10). ``xs`` maps stream name -> post-local-step value (leading
+        G axis): always ``"params"``, plus one entry per moment stream
+        when the round averages opt state. ``xs0`` holds the round-start
+        value of every stream whose codec is lossy — the codec reference:
+        the wire carries the delta ``x_T - x_0`` so quantization error
+        vanishes as rounds converge. Every stream follows the same
+        topology; each keeps its own codec state and (async) staleness
+        buffer. Returns ``(mixed: {name: value}, new_comm_state)``."""
         new_state = dict(comm_state)
-        if self.codec.identity or self.topology == "none":
-            # "none" skips the codec too: nothing goes on the wire, so a
-            # no-comm baseline must not inject quantization noise
-            x_hat = x_G
-        elif self.w is not None:
-            # decentralized + lossy: codec applied per mixing hop
-            mixed, cstate = self._decentral_lossy(
-                x_G, x0_G, comm_state.get("codec", {}))
-            if self.codec.stateful:
-                new_state["codec"] = cstate
-            return mixed, new_state
-        else:
-            delta = jax.tree.map(lambda a, b: a - b, x_G, x0_G)
-            delta_hat, cstate = self.codec.compress(
-                delta, comm_state.get("codec", {}))
-            x_hat = jax.tree.map(lambda b, d: b + d, x0_G, delta_hat)
-            if self.codec.stateful:
-                new_state["codec"] = cstate
+        cstates = dict(comm_state.get("codec", {}))
+        touched = False
+        x_hat = {}
+        mixed = {}
+        for name, x in xs.items():
+            codec = self.stream_codec(name)
+            if codec.identity or self.topology == "none":
+                # "none" skips the codec too: nothing goes on the wire,
+                # so a no-comm baseline must not inject quantization noise
+                x_hat[name] = x
+                continue
+            if self.w is not None:
+                # decentralized + lossy: codec applied per mixing hop
+                y, cs = self._decentral_lossy(x, xs0[name],
+                                              cstates.get(name, {}), codec)
+                mixed[name] = y
+                if codec.stateful:
+                    cstates[name] = cs
+                    touched = True
+                continue
+            delta = jax.tree.map(lambda a, b: a - b, x, xs0[name])
+            d_hat, cs = codec.compress(delta, cstates.get(name, {}))
+            x_hat[name] = jax.tree.map(lambda b, d: b + d, xs0[name], d_hat)
+            if codec.stateful:
+                cstates[name] = cs
+                touched = True
+        if touched:
+            new_state["codec"] = cstates
         if self.topology != "async_stale":
-            return self.mix(x_hat), new_state
+            mixed.update({k: self.mix(v) for k, v in x_hat.items()})
+            return mixed, new_state
         # bounded-staleness server: refresh only this round's pushers,
-        # average everyone's last push
+        # average everyone's last push — per stream (params + moments each
+        # keep their own staleness buffer, refreshed by the same mask)
         rnd = comm_state["round"]
         fresh = (jnp.arange(self.n_groups) + rnd) % (self.staleness + 1) == 0
 
@@ -173,10 +235,27 @@ class Exchange:
             keep = fresh.reshape((-1,) + (1,) * (x.ndim - 1))
             return jnp.where(keep, x, pushed)
 
-        pushed = jax.tree.map(refresh, comm_state["pushed"], x_hat)
+        pushed = jax.tree.map(refresh, comm_state["pushed"], x_hat["params"])
         new_state["pushed"] = pushed
+        mixed["params"] = self.mix(pushed)
+        mnames = [k for k in x_hat if k != "params"]
+        if mnames:
+            pushed_opt = dict(comm_state["pushed_opt"])
+            for k in mnames:
+                pushed_opt[k] = jax.tree.map(refresh, pushed_opt[k],
+                                             x_hat[k])
+                mixed[k] = self.mix(pushed_opt[k])
+            new_state["pushed_opt"] = pushed_opt
         new_state["round"] = rnd + 1
-        return self.mix(pushed), new_state
+        return mixed, new_state
+
+    def params(self, x_G, x0_G, comm_state: dict):
+        """Single-stream convenience wrapper over ``streams``: one
+        exchange of the models only (``x0_G`` may be None for identity
+        codecs). Returns ``(mixed_x_G, new_comm_state)``."""
+        xs0 = {} if x0_G is None else {"params": x0_G}
+        mixed, new_state = self.streams({"params": x_G}, xs0, comm_state)
+        return mixed["params"], new_state
 
     # -- wire accounting ---------------------------------------------------
 
@@ -205,41 +284,77 @@ class Exchange:
         # (single source until one actually diverges)
         return self.senders_per_round()
 
-    def _per_payload_bytes(self, n_params: int, moment_elems: int) -> int:
-        """One payload: the codec'd params buffer plus (when the round
-        averages opt state) the moment buffers at full fp32 width. The
-        downlink rides at the same width — the server re-encodes the new
-        mean as a delta against its last broadcast with the same codec."""
-        return self.codec.wire_bytes(n_params) + 4 * moment_elems
+    def _stream_payload_bytes(self, n_params: int,
+                              moment_sizes: Optional[Dict[str, int]]
+                              ) -> Dict[str, int]:
+        """One payload, per stream: each stream's buffer through ITS codec
+        (params via ``codec``, moments via ``moment_codec`` — the fp32
+        moment surcharge this replaces was ``4 * moment_elems``). The
+        downlink rides at the same widths — the server re-encodes the new
+        mean as a delta against its last broadcast with the same codecs."""
+        out = {"params": self.codec.wire_bytes(n_params)}
+        for k, n in (moment_sizes or {}).items():
+            out[k] = self.mcodec.wire_bytes(n)
+        return out
 
-    def wire_bytes_up(self, n_params: int, moment_elems: int = 0) -> int:
-        return int(round(self.senders_per_round()
-                         * self._per_payload_bytes(n_params, moment_elems)))
+    def _legacy_sizes(self, moment_elems: int,
+                      moment_sizes: Optional[Dict[str, int]]):
+        if moment_sizes is not None:
+            return moment_sizes
+        return {"moments": moment_elems} if moment_elems else {}
 
-    def wire_bytes_down(self, n_params: int, moment_elems: int = 0) -> int:
-        return int(round(self.receivers_per_round()
-                         * self._per_payload_bytes(n_params, moment_elems)))
+    def wire_bytes_by_stream(self, n_params: int,
+                             moment_sizes: Optional[Dict[str, int]] = None
+                             ) -> Dict[str, int]:
+        """TOTAL physical payload bytes per round, per stream (same
+        counting rule as ``wire_bytes_per_round``: server/async pushes and
+        replies are distinct payloads, p2p edge payloads count once). The
+        old totals are exactly the sums of these."""
+        per = self._stream_payload_bytes(n_params, moment_sizes)
+        s, r = self.senders_per_round(), self.receivers_per_round()
+        out = {}
+        for k, b in per.items():
+            up = int(round(s * b))
+            out[k] = up if self.w is not None else up + int(round(r * b))
+        return out
 
-    def wire_bytes_per_round(self, n_params: int,
-                             moment_elems: int = 0) -> int:
+    def wire_bytes_up(self, n_params: int, moment_elems: int = 0, *,
+                      moment_sizes: Optional[Dict[str, int]] = None) -> int:
+        ms = self._legacy_sizes(moment_elems, moment_sizes)
+        s = self.senders_per_round()
+        return sum(int(round(s * b)) for b in
+                   self._stream_payload_bytes(n_params, ms).values())
+
+    def wire_bytes_down(self, n_params: int, moment_elems: int = 0, *,
+                        moment_sizes: Optional[Dict[str, int]] = None) -> int:
+        ms = self._legacy_sizes(moment_elems, moment_sizes)
+        r = self.receivers_per_round()
+        return sum(int(round(r * b)) for b in
+                   self._stream_payload_bytes(n_params, ms).values())
+
+    def wire_bytes_per_round(self, n_params: int, moment_elems: int = 0, *,
+                             moment_sizes: Optional[Dict[str, int]] = None
+                             ) -> int:
         """TOTAL physical payload bytes per round (was uplink-only before
         downlink accounting landed; per-direction numbers are
-        ``wire_bytes_up`` / ``wire_bytes_down``). server/async: pushes and
-        broadcast replies are DISTINCT payloads — the total is their sum.
+        ``wire_bytes_up`` / ``wire_bytes_down``, per-stream splits
+        ``wire_bytes_by_stream``). server/async: pushes and broadcast
+        replies are DISTINCT payloads — the total is their sum.
         ring/gossip: each edge payload is one node's uplink AND its
         neighbor's downlink — the SAME transmission viewed from both
         endpoints — so the total counts it once, not twice."""
-        up = self.wire_bytes_up(n_params, moment_elems)
-        if self.w is not None:
-            return up
-        return up + self.wire_bytes_down(n_params, moment_elems)
+        ms = self._legacy_sizes(moment_elems, moment_sizes)
+        return sum(self.wire_bytes_by_stream(n_params, ms).values())
 
 
 def get_exchange(topology: str = "server", codec: str = "fp32",
                  n_groups: int = 1, *, mix_rounds: int = 1,
                  staleness: int = 1, seed: int = 0, impl: str = "auto",
-                 chunk: int = 256, topk_frac: float = 0.05) -> Exchange:
-    """Build an Exchange from names (the ``--comm`` / ``--codec`` flags)."""
+                 chunk: int = 256, topk_frac: float = 0.05,
+                 moment_codec: str = "fp32") -> Exchange:
+    """Build an Exchange from names (the ``--comm`` / ``--codec`` /
+    ``--moment-codec`` flags). ``moment_codec`` applies to every moment
+    stream of the payload (DESIGN.md §10); topk is refused there."""
     if topology not in TOPOLOGIES:
         raise ValueError(f"unknown topology {topology!r} "
                          f"(have {TOPOLOGIES})")
@@ -251,15 +366,29 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
             "async_stale + topk: error feedback assumes every round's "
             "payload is delivered, but the staleness schedule drops "
             "non-pushing rounds (DESIGN.md §8)")
+    if moment_codec == "topk":
+        # moments are re-estimated each step, not accumulated deltas of a
+        # fixed target: delaying dropped moment mass via error feedback
+        # would mix rounds-stale curvature into fresh estimates, and the
+        # sparsity pattern of |delta| has no meaning for second moments
+        raise NotImplementedError(
+            "topk is not supported as a moment codec (DESIGN.md §10): "
+            "error feedback would re-offer rounds-stale moment mass; use "
+            "fp32/fp16/bf16/int8 for the moment streams")
     c = codecs_mod.get_codec(codec, impl=impl, chunk=chunk,
                              topk_frac=topk_frac, seed=seed)
+    # moment streams share one codec instance seeded apart from the params
+    # stream so their stochastic-rounding bits are independent of it
+    mc = (_FP32 if moment_codec == "fp32" else
+          codecs_mod.get_codec(moment_codec, impl=impl, chunk=chunk,
+                               topk_frac=topk_frac, seed=seed + 1))
     w = None
     if topology in ("ring", "gossip"):
         w = topo_mod.mixing_matrix(topology, n_groups, seed=seed)
     return Exchange(topology=topology, codec=c, n_groups=n_groups,
                     mix_rounds=mix_rounds,
                     staleness=staleness if topology == "async_stale" else 0,
-                    w=w)
+                    w=w, moment_codec=mc)
 
 
 def default_exchange(n_groups: int) -> Exchange:

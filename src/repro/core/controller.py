@@ -52,6 +52,23 @@ class AdaptiveT:
                              "no communication cost to adapt T against)")
         return cls(r=step_time_s / comm_s, **kw)
 
+    @classmethod
+    def from_exchange(cls, step_time_s: float, exchange, n_params: int,
+                      moment_sizes=None, *,
+                      bandwidth_bytes_per_s: float = 50e9,
+                      **kw) -> "AdaptiveT":
+        """r priced from an Exchange's OWN stream-resolved accounting
+        (DESIGN.md §10): the payload is the params through the params
+        codec plus every moment stream through the moment codec —
+        switching ``moment_codec`` (int8 moments cut adamw's dominant
+        wire term ~4x) changes r, and with it the cost-optimal T*.
+        ``moment_sizes``: {stream: elems} of the moment buffers the round
+        averages (omit for params-only / average_opt_state=False)."""
+        wire = exchange.wire_bytes_per_round(n_params,
+                                             moment_sizes=moment_sizes)
+        return cls.from_comm_bytes(step_time_s, wire,
+                                   bandwidth_bytes_per_s, **kw)
+
     @property
     def t(self) -> int:
         return int(np.clip(round(self._t), self.t_min, self.t_max))

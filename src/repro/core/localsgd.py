@@ -75,8 +75,8 @@ def average_groups(tree):
 
 
 def _resolve_exchange(exchange, cfg: LocalSGDConfig, layout):
-    """Default + validate the round's exchange (see DESIGN.md §8 for the
-    combinations that refuse)."""
+    """Default + validate the round's exchange (see DESIGN.md §8/§10 for
+    the combinations that refuse)."""
     exch = exchange if exchange is not None else comm_mod.default_exchange(
         cfg.n_groups)
     if exch.n_groups != cfg.n_groups:
@@ -88,40 +88,73 @@ def _resolve_exchange(exchange, cfg: LocalSGDConfig, layout):
             f"codec {exch.codec.name!r} needs the packed (G, N) buffer as "
             "its wire format — run the round with a packing.Layout "
             "(DESIGN.md §8)")
+    if (cfg.average_opt_state and exch.mcodec.flat_only and layout is None
+            and exch.topology != "none"):
+        raise NotImplementedError(
+            f"moment codec {exch.mcodec.name!r} needs packed flat moment "
+            "buffers as its wire format — run the round with a "
+            "packing.Layout and a packed optimizer (DESIGN.md §10)")
     if cfg.average_opt_state and not exch.supports_opt_state_averaging:
         raise NotImplementedError(
-            f"{exch.topology} keeps one staleness buffer per group for "
-            "the params only; set average_opt_state=False (DESIGN.md §8)")
+            f"{exch.topology} cannot average opt state; set "
+            "average_opt_state=False (DESIGN.md §10)")
     return exch
 
 
-def _check_comm_state(exch, state_G):
+def _check_comm_state(exch, state_G, mkeys=()):
     if exch.stateful and "comm" not in state_G:
         raise ValueError(
             f"exchange {exch.name!r} carries round-to-round state "
             "(staleness buffers / codec residuals); build the train state "
             "with init_state(..., exchange=...)")
+    if (exch.topology == "async_stale" and mkeys
+            and "pushed_opt" not in state_G.get("comm", {})):
+        raise ValueError(
+            "async_stale averages opt state through per-stream staleness "
+            "buffers; build the train state with init_state(..., "
+            "exchange=...) so comm['pushed_opt'] is allocated "
+            "(DESIGN.md §10)")
 
 
 def _round_wire_bytes(exch, params_G, opt_G, avg_opt: bool,
                       n_groups: int) -> dict:
     """Exact payload bytes this round puts on the wire (static ints —
-    shapes only), matching what the round actually exchanges: the params
-    buffer through the codec, plus — when the round averages opt state —
-    the moment buffers at fp32. The step counter is never exchanged on
-    either path (map_moments convention). Returns the three metric keys:
-    ``wire_bytes_up`` / ``wire_bytes_down`` per direction (DESIGN.md §8
-    downlink models) and ``wire_bytes`` — the physical total (the key
-    that predates downlink accounting; p2p payloads count once)."""
+    shapes only), matching what the round actually exchanges: every
+    stream of the payload through ITS codec — params via the params
+    codec, each moment stream via the moment codec (DESIGN.md §10). The
+    step counter is never exchanged on either path. Returns the totals
+    (``wire_bytes`` — the physical total, p2p payloads count once —
+    plus per-direction ``wire_bytes_up`` / ``wire_bytes_down``) and one
+    ``wire_bytes/<stream>`` key per stream; the totals are exactly the
+    sums of the per-stream splits."""
     n = sum(l.size // n_groups for l in jax.tree.leaves(params_G))
-    m = 0
+    moment_sizes = {}
     if avg_opt:
-        m = sum(l.size // n_groups
-                for k, v in opt_G.items() if k != "count"
-                for l in jax.tree.leaves(v))
-    return {"wire_bytes": exch.wire_bytes_per_round(n, m),
-            "wire_bytes_up": exch.wire_bytes_up(n, m),
-            "wire_bytes_down": exch.wire_bytes_down(n, m)}
+        moment_sizes = {
+            k: sum(l.size // n_groups for l in jax.tree.leaves(v))
+            for k, v in opt_G.items() if k != "count"}
+    by_stream = exch.wire_bytes_by_stream(n, moment_sizes)
+    out = {"wire_bytes": sum(by_stream.values()),
+           "wire_bytes_up": exch.wire_bytes_up(n, moment_sizes=moment_sizes),
+           "wire_bytes_down": exch.wire_bytes_down(
+               n, moment_sizes=moment_sizes)}
+    out.update({f"wire_bytes/{k}": v for k, v in by_stream.items()})
+    return out
+
+
+def _clamp_nonneg_streams(mixed: dict, opt, exch) -> dict:
+    """Project lossy-decoded non-negative moment streams (adamw's second
+    moment) back onto [0, inf): a delta codec's decode error is bounded
+    by the chunk scale, so small-magnitude v elements can come back
+    slightly negative and sqrt(v) would NaN. The true value is >= 0, so
+    the projection only shrinks the decode error. Identity moment codecs
+    skip this entirely (the default path stays bit-exact)."""
+    if exch.mcodec.identity or exch.topology == "none":
+        return mixed
+    nonneg = getattr(opt, "moment_nonneg", ())
+    return {k: (jax.tree.map(lambda x: jnp.maximum(x, 0.0), v)
+                if k in nonneg else v)
+            for k, v in mixed.items()}
 
 
 def grad_sq_norm(grads, use_pallas: bool = False) -> jax.Array:
@@ -256,12 +289,18 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
         else microbatch_group
 
     def round_(state_G, batch_G):
-        _check_comm_state(exch, state_G)
-        comm_state = state_G.get("comm", {})
         st = {"params": state_G["params"], "opt": state_G["opt"]}
-        # lossy codecs transmit the round delta vs these (identity codecs
-        # never touch x0, keeping the default path bit-exact)
-        x0 = None if exch.codec.identity else st["params"]
+        mkeys = (tuple(k for k in st["opt"] if k != "count")
+                 if cfg.average_opt_state else ())
+        _check_comm_state(exch, state_G, mkeys)
+        comm_state = state_G.get("comm", {})
+        # lossy codecs transmit each stream's round delta vs these
+        # (identity codecs never touch x0, keeping the default bit-exact)
+        xs0 = {}
+        if not exch.codec.identity:
+            xs0["params"] = st["params"]
+        if not exch.mcodec.identity:
+            xs0.update({k: st["opt"][k] for k in mkeys})
         if cfg.t_i is not None and cfg.inner_mode == "fixed_batch":
             assert len(cfg.t_i) == cfg.n_groups, cfg.t_i
             assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
@@ -269,21 +308,21 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
             st, metrics = jax.vmap(fixed_batch_group)(st, batch_G, t_vec)
         else:
             st, metrics = jax.vmap(group_fn)(st, batch_G)
-        # ---- communication: the paper's exchange, now pluggable -----------
-        new_params, comm_state = exch.params(st["params"], x0, comm_state)
-        if cfg.average_opt_state:
-            # moment buffers follow the topology; the step counter is
-            # never exchanged (map_moments convention, same as the packed
-            # path) — mixing an int32 counter through a float matmul
-            # would truncate and drift it across groups, and under t_i
-            # the per-group counts are meaningful
-            new_opt = map_moments(exch.mix, st["opt"])
-        else:
-            new_opt = st["opt"]
+        # ---- communication: the multi-stream exchange (DESIGN.md §10) ----
+        # params plus (when averaging opt state) one stream per moment
+        # buffer, each through its own codec; the step counter is never
+        # exchanged — mixing an int32 counter through a float matmul
+        # would truncate and drift it across groups, and under t_i the
+        # per-group counts are meaningful
+        xs = {"params": st["params"]}
+        xs.update({k: st["opt"][k] for k in mkeys})
+        mixed, comm_state = exch.streams(xs, xs0, comm_state)
+        mixed = _clamp_nonneg_streams(mixed, opt, exch)
+        new_opt = {k: mixed.get(k, v) for k, v in st["opt"].items()}
         metrics.update(_round_wire_bytes(
             exch, st["params"], st["opt"], cfg.average_opt_state,
             cfg.n_groups))
-        out = {"params": new_params, "opt": new_opt}
+        out = {"params": mixed["params"], "opt": new_opt}
         if "comm" in state_G:
             out["comm"] = comm_state
         return out, metrics
@@ -317,37 +356,41 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
     evaluated once on the round's result) or "traj" (per-step
     trajectories, matching the pytree round's metrics exactly).
 
-    Not on this path (use the pytree path): threshold (T_i = inf) mode,
-    and per-node t_i with adamw (it needs per-group bias correction).
+    Per-node t_i with a count-dependent update (adamw bias correction,
+    lr schedules) runs the fused step vmapped over G with a PER-GROUP
+    count vector (masked like the moments), matching the pytree path's
+    per-group counters — replicated path only (DESIGN.md §10). Not on
+    this path (use the pytree path): threshold (T_i = inf) mode.
     """
     assert cfg.metrics in ("traj", "final"), cfg.metrics
     if cfg.threshold is not None:
         raise NotImplementedError(
             "threshold (T_i=inf) mode runs on the pytree path")
-    # Anything whose update depends on the step counter (adamw bias
-    # correction, lr schedules) needs per-group counts under t_i, and the
-    # packed path keeps ONE shared scalar count — so refuse those combos.
-    if cfg.t_i is not None and getattr(opt, "count_dependent", False):
-        raise NotImplementedError(
-            "per-node t_i with a count-dependent update (adamw bias "
-            "correction / lr schedules) needs per-group step counts; "
-            "use the pytree path")
     if cfg.t_i is not None and cfg.inner_mode == "microbatch":
         raise NotImplementedError(
             "t_i is only defined for fixed_batch mode (the pytree path "
             "silently ignores it for microbatch)")
+    # Count-dependent updates (adamw bias correction, lr schedules) need
+    # per-group step counts under t_i: the fused step runs vmapped over G
+    # with a (G,) count vector instead of the shared scalar.
+    per_group_count = (cfg.t_i is not None
+                       and getattr(opt, "count_dependent", False))
+    if per_group_count and shardexec is not None:
+        raise NotImplementedError(
+            "per-node t_i with a count-dependent update keeps a (G,) "
+            "count vector outside the shard_map opt step; run it on the "
+            "replicated packed path (DESIGN.md §10)")
     use_pallas = getattr(opt, "impl", "jnp") == "pallas"
     flat_vg = packing.value_and_flat_grad(loss_fn, layout)
+    slayout = packing.stream_layout_for(opt, layout)
 
     if shardexec is not None:
         opt_step = shardexec.opt_step(opt)
-        exch_params = shardexec.exchange(exch, layout)
-        mix_moments = shardexec.mix(exch)
+        exch_streams = shardexec.exchange_streams(exch, layout)
         gsq_groups = shardexec.sq_norm_groups(use_pallas)
     else:
-        opt_step = opt.step
-        exch_params = exch.params
-        mix_moments = exch.mix
+        opt_step = (jax.vmap(opt.step) if per_group_count else opt.step)
+        exch_streams = exch.streams
 
         def gsq_groups(g_G):
             return _grad_sq_norm_groups(g_G, use_pallas)
@@ -357,13 +400,26 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
         assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
 
     def round_(state_G, batch_G):
-        _check_comm_state(exch, state_G)
+        mkeys = slayout.moment_streams if cfg.average_opt_state else ()
+        assert set(mkeys) <= set(state_G["opt"]), (mkeys,
+                                                   tuple(state_G["opt"]))
+        _check_comm_state(exch, state_G, mkeys)
         had_comm = "comm" in state_G
         comm_state = state_G.get("comm", {})
-        state_G = {"params": state_G["params"], "opt": state_G["opt"]}
-        # lossy codecs transmit the round delta vs these (identity codecs
-        # never touch x0, keeping the default path bit-exact + donatable)
-        x0 = None if exch.codec.identity else state_G["params"]
+        opt0 = state_G["opt"]
+        if per_group_count and opt0["count"].ndim == 0:
+            # first round after init: promote the shared scalar count to
+            # the per-group vector the masked t_i updates need
+            opt0 = {**opt0, "count": jnp.broadcast_to(
+                opt0["count"], (cfg.n_groups,))}
+        state_G = {"params": state_G["params"], "opt": opt0}
+        # lossy codecs transmit each stream's round delta vs these
+        # (identity codecs never touch x0: bit-exact + donatable)
+        xs0 = {}
+        if not exch.codec.identity:
+            xs0["params"] = state_G["params"]
+        if not exch.mcodec.identity:
+            xs0.update({k: state_G["opt"][k] for k in mkeys})
         t_vec = (jnp.asarray(cfg.t_i, jnp.int32)
                  if cfg.t_i is not None else None)
 
@@ -376,11 +432,17 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
                 keep = (t < t_vec)[:, None]           # (G, 1)
                 new_p = jnp.where(keep, new_p, state["params"])
                 old_o = state["opt"]
-                # same "count stays shared" convention as map_moments —
-                # inline because the mask needs old AND new per key
-                new_o = {k: (v if k == "count"
-                             else jnp.where(keep, v, old_o[k]))
-                         for k, v in new_o.items()}
+
+                def mask(k, v):
+                    # count stays the shared scalar (map_moments
+                    # convention) unless the update is count-dependent —
+                    # then it is per-group and masks like the moments
+                    if k == "count":
+                        return (jnp.where(t < t_vec, v, old_o[k])
+                                if per_group_count else v)
+                    return jnp.where(keep, v, old_o[k])
+
+                new_o = {k: mask(k, v) for k, v in new_o.items()}
             new = {"params": new_p, "opt": new_o}
             if not traj:
                 # hot path: no per-step diagnostics to materialize — XLA
@@ -430,19 +492,18 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
             metrics = {"loss": loss_G,
                        "inner_steps": n_steps,
                        "grad_sq": gsq_G}
-        # ---- communication: ONE flat buffer through the exchange --------
-        new_params, comm_state = exch_params(state_G["params"], x0,
-                                             comm_state)
-        if cfg.average_opt_state:
-            # moment buffers follow the topology at fp32; the shared step
-            # counter stays untouched (map_moments convention)
-            new_opt = map_moments(mix_moments, state_G["opt"])
-        else:
-            new_opt = state_G["opt"]
+        # ---- communication: flat buffers through the stream exchange ----
+        # every stream (params + averaged moments) rides its own codec;
+        # the step counter is never exchanged (map_moments convention)
+        xs = {"params": state_G["params"]}
+        xs.update({k: state_G["opt"][k] for k in mkeys})
+        mixed, comm_state = exch_streams(xs, xs0, comm_state)
+        mixed = _clamp_nonneg_streams(mixed, opt, exch)
+        new_opt = {k: mixed.get(k, v) for k, v in state_G["opt"].items()}
         metrics.update(_round_wire_bytes(
             exch, state_G["params"], state_G["opt"],
             cfg.average_opt_state, cfg.n_groups))
-        out = {"params": new_params, "opt": new_opt}
+        out = {"params": mixed["params"], "opt": new_opt}
         if had_comm:
             out["comm"] = comm_state
         return out, metrics
@@ -501,7 +562,8 @@ def make_sync_step(loss_fn: Callable, opt: Optimizer,
 
 def init_state(params, opt: Optimizer, n_groups: Optional[int] = None,
                layout: Optional[packing.Layout] = None,
-               exchange: Optional["comm_mod.Exchange"] = None):
+               exchange: Optional["comm_mod.Exchange"] = None,
+               average_opt_state: bool = True):
     if layout is not None:
         buf = packing.pack(params, layout)
         state = {"params": buf, "opt": opt.init(buf)}
@@ -519,7 +581,16 @@ def init_state(params, opt: Optimizer, n_groups: Optional[int] = None,
         if not n_groups:
             raise ValueError("stateful exchanges need a grouped state "
                              "(pass n_groups)")
-        state["comm"] = exchange.init(state["params"])
+        # moment streams ride the exchange too (DESIGN.md §10): hand the
+        # exchange every moment buffer so it can allocate per-stream
+        # codec state and (async) per-stream staleness buffers — but only
+        # when the rounds will actually average opt state (match
+        # cfg.average_opt_state here, or dead G x Np pushed_opt copies
+        # ride the donated train state and every checkpoint)
+        moments = ({k: v for k, v in state["opt"].items() if k != "count"}
+                   if average_opt_state else {})
+        state["comm"] = exchange.init(state["params"],
+                                      moments=moments or None)
     return state
 
 

@@ -70,7 +70,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             schedule: str = "rect", embed_impl: str = "",
             packed: bool = False, comm: str = "server",
             codec: str = "fp32", mix_rounds: int = 1,
-            staleness: int = 1, impl: str = "auto") -> dict:
+            staleness: int = 1, impl: str = "auto",
+            moment_codec: str = "fp32") -> dict:
     import dataclasses as _dc
 
     import jax
@@ -92,7 +93,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
         kw = {"mode": mode, "t_inner": t_inner, "opt_name": opt_name,
               "policy": policy, "schedule": schedule, "packed": packed,
               "comm": comm, "codec": codec, "mix_rounds": mix_rounds,
-              "staleness": staleness, "impl": impl}
+              "staleness": staleness, "impl": impl,
+              "moment_codec": moment_codec}
         if moe_impl:
             kw["moe_impl"] = moe_impl
     elif shape.kind == "prefill":
@@ -239,6 +241,11 @@ def main() -> None:
     ap.add_argument("--codec", default="fp32",
                     choices=["fp32", "fp16", "bf16", "int8", "topk"],
                     help="wire codec; int8/topk need --packed")
+    ap.add_argument("--moment-codec", default="fp32",
+                    choices=["fp32", "fp16", "bf16", "int8"],
+                    help="wire codec for the optimizer moment streams "
+                         "(DESIGN.md §10); meta reports per-stream "
+                         "wire_bytes_per_round_by_stream")
     ap.add_argument("--mix-rounds", type=int, default=1,
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
@@ -271,6 +278,8 @@ def main() -> None:
             extra += ["--comm", args.comm]
         if args.codec != "fp32":
             extra += ["--codec", args.codec]
+        if args.moment_codec != "fp32":
+            extra += ["--moment-codec", args.moment_codec]
         if args.mix_rounds != 1:
             extra += ["--mix-rounds", str(args.mix_rounds)]
         if args.staleness != 1:
@@ -290,7 +299,7 @@ def main() -> None:
                       schedule=args.schedule, embed_impl=args.embed_impl,
                       packed=args.packed, comm=args.comm, codec=args.codec,
                       mix_rounds=args.mix_rounds, staleness=args.staleness,
-                      impl=args.impl)
+                      impl=args.impl, moment_codec=args.moment_codec)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

@@ -143,7 +143,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      policy: str = "tp", packed: bool = False,
                      comm: str = "server", codec: str = "fp32",
                      mix_rounds: int = 1, staleness: int = 1,
-                     impl: str = "auto") -> BuiltStep:
+                     impl: str = "auto",
+                     moment_codec: str = "fp32") -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
     on an fsdp mesh (params additionally sharded over "fsdp").
@@ -157,14 +158,17 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     otherwise the buffer is replicated within a group.
 
     comm/codec select the exchange backend (repro.comm, DESIGN.md §8) for
-    local-SGD rounds. Flat-only codecs (int8/topk) need packed=True; comm
-    state (codec residuals, staleness buffers) rides in the train state
-    and shares its shardings.
+    local-SGD rounds; moment_codec applies to every moment stream of the
+    payload (DESIGN.md §10 — fp32/fp16/bf16/int8, topk refused). Flat-only
+    codecs (int8) on either stream need packed=True; comm state (per-stream
+    codec residuals, staleness buffers) rides in the train state and
+    shares its shardings.
 
     impl picks the packed-update/codec kernels: "pallas" (fused kernels —
     sharded or single-device packed paths only), "jnp" (one XLA fusion),
     "auto" (pallas where supported, else jnp)."""
-    if mode == "sync" and (comm != "server" or codec != "fp32"):
+    if mode == "sync" and (comm != "server" or codec != "fp32"
+                           or moment_codec != "fp32"):
         raise ValueError(
             "comm/codec select the local-SGD model exchange; sync-DP "
             "all-reduces gradients every step and has no exchange — "
@@ -201,7 +205,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                 "— drop the fsdp axis or use mode='localsgd'")
         return _build_packed_train_step(cfg, shape, mesh, model, opt_name,
                                         lr, mode, t_inner, comm, codec,
-                                        mix_rounds, staleness, impl)
+                                        mix_rounds, staleness, impl,
+                                        moment_codec)
     if impl != "auto":
         # same no-silent-fallback rule as optim.get: the pytree round has
         # no fused-kernel path for impl to select
@@ -234,7 +239,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     assert shape.global_batch % G == 0, (shape.global_batch, G)
     b = shape.global_batch // G
     exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
-                                        staleness)
+                                        staleness,
+                                        moment_codec=moment_codec)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -251,7 +257,9 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     state_abs = {"params": params_G, "opt": opt_G}
     sspecs = {"params": pspecs_G, "opt": ospecs_G}
     _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
-                    param_specs=pspecs_G)
+                    param_specs=pspecs_G,
+                    moments={k: v for k, v in opt_G.items()
+                             if k != "count"})
     inner_axis = None
     if policy == "dp":
         inner_axis = "model"
@@ -264,10 +272,11 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         return sum(int(np.prod(s.shape)) if s.shape else 1
                    for s in jax.tree.leaves(tree))
 
-    # moment accounting mirrors the round's _round_wire_bytes: moment
-    # buffers ride at fp32; the step counter is never exchanged
-    moment_elems = _n({k: v for k, v in opt_1.items()
-                       if k != "count"}) if avg_opt else 0
+    # stream-resolved wire accounting mirrors the round's
+    # _round_wire_bytes: each moment stream rides its own codec; the step
+    # counter is never exchanged
+    moment_sizes = ({k: _n(v) for k, v in opt_1.items() if k != "count"}
+                    if avg_opt else {})
     n_p = _n(params_abs)
     return BuiltStep(
         round_, (state_abs, batch_abs),
@@ -278,11 +287,13 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "t_inner": t_inner, "policy": policy,
          "param_dtype": cfg.param_dtype, "comm": exchange.name,
          "wire_bytes_per_round": exchange.wire_bytes_per_round(
-             n_p, moment_elems),
+             n_p, moment_sizes=moment_sizes),
          "wire_bytes_up_per_round": exchange.wire_bytes_up(
-             n_p, moment_elems),
+             n_p, moment_sizes=moment_sizes),
          "wire_bytes_down_per_round": exchange.wire_bytes_down(
-             n_p, moment_elems)})
+             n_p, moment_sizes=moment_sizes),
+         "wire_bytes_per_round_by_stream": exchange.wire_bytes_by_stream(
+             n_p, moment_sizes)})
 
 
 def _packed_impl(impl: str, mesh: Mesh, sexec) -> str:
@@ -310,30 +321,34 @@ def _packed_impl(impl: str, mesh: Mesh, sexec) -> str:
 
 def _build_exchange(comm: str, codec: str, n_groups: int,
                     mix_rounds: int = 1, staleness: int = 1,
-                    impl: str = "jnp"):
+                    impl: str = "jnp", moment_codec: str = "fp32"):
     """Exchange for a mesh step builder; ``impl`` selects the codec
     kernels and must already be resolved for the execution path
     (``_packed_impl`` — shard_map runs the Pallas quantize kernels on
     shard-local rows; the replicated fallback keeps the jnp reference).
-    Returns (exchange, average_opt_state) — async_stale keeps staleness
-    buffers for params only, so it turns opt-state averaging off."""
+    ``moment_codec`` applies to every moment stream (DESIGN.md §10).
+    Returns (exchange, average_opt_state) — True on every topology since
+    the per-stream staleness buffers landed."""
     exchange = comm_mod.get_exchange(comm, codec, n_groups, impl=impl,
                                      mix_rounds=mix_rounds,
-                                     staleness=staleness)
+                                     staleness=staleness,
+                                     moment_codec=moment_codec)
     return exchange, exchange.supports_opt_state_averaging
 
 
 def _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
-                    param_specs):
-    """Thread stateful-exchange memory (codec residuals, staleness
-    buffers, counters) into the abstract state + shardings. The
-    ``pushed`` staleness buffer mirrors the params, so it takes the
-    params' OWN specs (keeping TP/fsdp sharding — a lead-only spec would
-    replicate the whole per-group model and reshard every round); other
-    G-leading leaves shard on the group axis, scalars replicate."""
+                    param_specs, moments=None):
+    """Thread stateful-exchange memory (per-stream codec residuals,
+    staleness buffers, counters) into the abstract state + shardings.
+    The ``pushed`` staleness buffer and every ``pushed_opt`` stream
+    mirror the params' geometry, so they take the params' OWN specs
+    (keeping TP/fsdp sharding — a lead-only spec would replicate the
+    whole per-group model and reshard every round); other G-leading
+    leaves shard on the group axis, scalars replicate."""
     if not exchange.stateful:
         return
-    comm_abs = jax.eval_shape(exchange.init, params_G)
+    comm_abs = jax.eval_shape(
+        lambda p, m: exchange.init(p, moments=m), params_G, moments)
     lead = P(dp) if dp else P()
 
     def spec(s):
@@ -341,9 +356,14 @@ def _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
             return P(*(tuple(lead) + (None,) * (s.ndim - 1)))
         return P(*((None,) * s.ndim))
 
-    cspecs = {k: (param_specs if k == "pushed"
-                  else jax.tree.map(spec, v))
-              for k, v in comm_abs.items()}
+    def for_key(k, v):
+        if k == "pushed":
+            return param_specs
+        if k == "pushed_opt":
+            return {name: param_specs for name in v}
+        return jax.tree.map(spec, v)
+
+    cspecs = {k: for_key(k, v) for k, v in comm_abs.items()}
     state_abs["comm"] = comm_abs
     sspecs["comm"] = cspecs
 
@@ -353,7 +373,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                              t_inner: int, comm: str = "server",
                              codec: str = "fp32", mix_rounds: int = 1,
                              staleness: int = 1,
-                             impl: str = "auto") -> BuiltStep:
+                             impl: str = "auto",
+                             moment_codec: str = "fp32") -> BuiltStep:
     """Flat-buffer train step (DESIGN.md §6/§9): one (G, Np) f32 buffer
     per state part, donated so XLA updates the model in place across the
     T-step round. When the mesh has an in-group axis ("model"/"fsdp" > 1)
@@ -393,7 +414,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     assert shape.global_batch % G == 0, (shape.global_batch, G)
     b = shape.global_batch // G
     exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
-                                        staleness, impl=impl)
+                                        staleness, impl=impl,
+                                        moment_codec=moment_codec)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -409,11 +431,15 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
               "opt": {k: (P() if k == "count" else buf_spec)
                       for k in opt_abs}}
     _add_comm_state(exchange, buf_G, state_abs, sspecs, dp, G,
-                    param_specs=buf_spec)
+                    param_specs=buf_spec,
+                    moments={k: v for k, v in opt_abs.items()
+                             if k != "count"})
     batch_abs, bspecs = batch_abstract(cfg, (G, b), shape.seq_len, mesh,
                                        leading_group=True)
     n_wire = layout.padded       # the buffer IS the wire format, pad incl.
-    m_wire = (len(opt_abs) - 1) * layout.padded if avg_opt else 0
+    slayout = packing.stream_layout_for(opt, layout)
+    moment_sizes = ({k: n_wire for k in slayout.moment_streams}
+                    if avg_opt else {})
     return BuiltStep(
         round_, (state_abs, batch_abs),
         (_ns(mesh, sspecs), _ns(mesh, bspecs)),
@@ -425,14 +451,18 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "sharded": sexec is not None,
          "n_shards": sexec.n_shards if sexec is not None else 1,
          "impl": impl, "param_dtype": cfg.param_dtype,
-         "comm": exchange.name,
-         # packed rounds exchange the moment buffers but never the
-         # shared step counter (mirrors _round_wire_bytes)
+         "comm": exchange.name, "streams": list(slayout.streams),
+         # packed rounds exchange every moment stream through its own
+         # codec but never the shared step counter (mirrors
+         # _round_wire_bytes); totals == sums of the per-stream splits
          "wire_bytes_per_round": exchange.wire_bytes_per_round(
-             n_wire, m_wire),
-         "wire_bytes_up_per_round": exchange.wire_bytes_up(n_wire, m_wire),
+             n_wire, moment_sizes=moment_sizes),
+         "wire_bytes_up_per_round": exchange.wire_bytes_up(
+             n_wire, moment_sizes=moment_sizes),
          "wire_bytes_down_per_round": exchange.wire_bytes_down(
-             n_wire, m_wire)},
+             n_wire, moment_sizes=moment_sizes),
+         "wire_bytes_per_round_by_stream": exchange.wire_bytes_by_stream(
+             n_wire, moment_sizes)},
         donate_argnums=(0,))
 
 

@@ -85,6 +85,11 @@ def main() -> None:
                     help="wire codec for the model exchange; int8/topk "
                          "need --packed (the flat buffer is the wire "
                          "format)")
+    ap.add_argument("--moment-codec", default="fp32",
+                    choices=["fp32", "fp16", "bf16", "int8"],
+                    help="wire codec for the optimizer moment streams "
+                         "(DESIGN.md §10); int8 needs --packed, topk is "
+                         "refused for moments")
     ap.add_argument("--mix-rounds", type=int, default=1,
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
@@ -95,7 +100,8 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
     if args.mode == "sync" and (args.comm != "server"
-                                or args.codec != "fp32"):
+                                or args.codec != "fp32"
+                                or args.moment_codec != "fp32"):
         ap.error("--comm/--codec select the local-SGD model exchange; "
                  "sync-DP all-reduces gradients every step and has no "
                  "exchange to configure")
@@ -168,8 +174,10 @@ def main() -> None:
         exchange = comm_mod.get_exchange(
             args.comm, args.codec, G, mix_rounds=args.mix_rounds,
             staleness=args.staleness,
-            impl=args.impl if args.packed else "auto")
-        # e.g. async_stale keeps staleness buffers for the params only
+            impl=args.impl if args.packed else "auto",
+            moment_codec=args.moment_codec)
+        # every topology averages opt state now that the per-stream
+        # staleness buffers exist (DESIGN.md §10)
         avg_opt = exchange.supports_opt_state_averaging
         lcfg = lsgd.LocalSGDConfig(
             n_groups=G, inner_steps=t_inner, t_i=t_i,
@@ -181,7 +189,8 @@ def main() -> None:
                                             shardexec=sexec),
                       donate_argnums=(0,))
         state = lsgd.init_state(params, opt, n_groups=G, layout=layout,
-                                exchange=exchange)
+                                exchange=exchange,
+                                average_opt_state=avg_opt)
         if sexec is not None:
             # place the buffers on the mesh once; donation keeps every
             # subsequent round's state resident in place

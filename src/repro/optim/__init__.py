@@ -8,7 +8,7 @@ apply (plus replicated scalars).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +26,22 @@ class Optimizer:
     packed: bool = False
     impl: str = "jnp"
     # Update depends on the step counter (adamw bias correction, lr
-    # schedules). The packed round keeps ONE shared count, so these are
-    # incompatible with per-node t_i (localsgd guards on this flag).
+    # schedules). The packed round normally keeps ONE shared scalar count;
+    # under per-node t_i, count-dependent packed updates run vmapped over
+    # G with a per-group count vector instead (DESIGN.md §10).
     count_dependent: bool = False
+    # Named moment STREAMS of the state (everything but the shared step
+    # counter), in a fixed order. This is the multi-stream payload
+    # contract (DESIGN.md §10): packed state is {"count"} + one flat
+    # buffer per stream, each the same shape as the params buffer, so
+    # comm codecs / staleness buffers / wire accounting address moments
+    # by stream name instead of treating opt state as opaque.
+    moment_keys: Tuple[str, ...] = ()
+    # Streams that must stay >= 0 (adamw's second moment: sqrt(v) NaNs on
+    # the slightly-negative values a lossy delta codec can decode). The
+    # round projects these back onto [0, inf) after a LOSSY moment
+    # exchange; identity moment codecs never touch them (bit-exactness).
+    moment_nonneg: Tuple[str, ...] = ()
 
 
 def sgd(lr: float) -> Optimizer:
@@ -54,7 +67,7 @@ def momentum(lr: float, beta: float = 0.9) -> Optimizer:
         new = jax.tree.map(lambda p, m: p - lr * m, params, mu)
         return new, {"count": state["count"] + 1, "mu": mu}
 
-    return Optimizer(init, step, "momentum")
+    return Optimizer(init, step, "momentum", moment_keys=("mu",))
 
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
@@ -87,7 +100,8 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         new_v = jax.tree.unflatten(td, [o[2] for o in outs])
         return new_p, {"count": c, "m": new_m, "v": new_v}
 
-    return Optimizer(init, step, "adamw", count_dependent=True)
+    return Optimizer(init, step, "adamw", count_dependent=True,
+                     moment_keys=("m", "v"), moment_nonneg=("v",))
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +182,8 @@ def packed_momentum(lr: float, beta: float = 0.9, *,
             new = buf - lr * mu
         return new, {"count": state["count"] + 1, "mu": mu}
 
-    return Optimizer(init, step, "momentum", packed=True, impl=impl)
+    return Optimizer(init, step, "momentum", packed=True, impl=impl,
+                     moment_keys=("mu",))
 
 
 def packed_adamw(lr: float, b1: float = 0.9, b2: float = 0.999,
@@ -203,7 +218,8 @@ def packed_adamw(lr: float, b1: float = 0.9, b2: float = 0.999,
         return new, {"count": c, "m": m, "v": v}
 
     return Optimizer(init, step, "adamw", packed=True, impl=impl,
-                     count_dependent=True)
+                     count_dependent=True, moment_keys=("m", "v"),
+                     moment_nonneg=("v",))
 
 
 _PACKED = {"sgd": packed_sgd, "momentum": packed_momentum,

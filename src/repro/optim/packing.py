@@ -93,6 +93,64 @@ def shard_layout(layout: Layout, n_shards: int,
                          n_shards=n_shards, align=align, pad_to=pad_to)
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamLayout:
+    """Named streams over ONE buffer geometry (DESIGN.md §10).
+
+    A packed train state is several flat buffers that all share the params
+    Layout: the params themselves plus the optimizer's moment buffers
+    (momentum ``mu``, adamw ``m``/``v``). A StreamLayout names them —
+    ``streams[0]`` is always ``"params"``, the rest are the optimizer's
+    ``moment_keys`` — so every layer (codecs, wire accounting, staleness
+    buffers, checkpoints) can address "the payload" per stream instead of
+    special-casing params vs opaque opt state.
+
+    Each stream is a ``(..., base.padded)`` f32 buffer; ``stack`` gives
+    the one ``(S, ..., padded)`` stacked view fused whole-payload kernels
+    and codecs can consume (streams share chunk alignment, so per-chunk
+    codec metadata stays stream-local in the stacked view too).
+    """
+    base: Layout
+    streams: Tuple[str, ...]
+
+    def __post_init__(self):
+        assert self.streams and self.streams[0] == "params", self.streams
+        assert len(set(self.streams)) == len(self.streams), self.streams
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.streams)
+
+    @property
+    def moment_streams(self) -> Tuple[str, ...]:
+        return self.streams[1:]
+
+    def index(self, name: str) -> int:
+        return self.streams.index(name)
+
+    def sizes(self) -> dict:
+        """Per-stream wire element count (the buffer IS the wire format,
+        padding included — same rule as the params stream)."""
+        return {name: self.base.padded for name in self.streams}
+
+    def abstract(self, leading: Tuple[int, ...] = ()) -> dict:
+        return {name: self.base.abstract(leading) for name in self.streams}
+
+    def stack(self, bufs: dict) -> jax.Array:
+        """{name: (..., padded)} -> one (S, ..., padded) stacked view."""
+        return jnp.stack([bufs[name] for name in self.streams])
+
+    def unstack(self, stacked: jax.Array) -> dict:
+        assert stacked.shape[0] == self.n_streams, stacked.shape
+        return {name: stacked[i] for i, name in enumerate(self.streams)}
+
+
+def stream_layout_for(opt, layout: Layout) -> StreamLayout:
+    """StreamLayout of a packed optimizer's state on ``layout``: params
+    plus the optimizer's declared moment streams (``opt.moment_keys``)."""
+    return StreamLayout(layout, ("params",) + tuple(opt.moment_keys))
+
+
 def layout_of(tree) -> Layout:
     """Build the static layout from a pytree of arrays/ShapeDtypeStructs."""
     leaves, treedef = jax.tree.flatten(tree)

@@ -8,7 +8,9 @@ within each group. This module removes both limits: the buffer shards over
 the in-group mesh axes (``"fsdp"``/``"model"``) via a chunk-aligned
 ``packing.ShardedLayout``, and the fused optimizer kernels, the int8
 quantize/dequantize codec kernels, and the ``sq_norm`` metric reduction
-run inside ``jax.shard_map`` blocks on each device's LOCAL shard.
+run inside ``jax.shard_map`` blocks on each device's LOCAL shard. The
+moment streams shard exactly like the params (same ShardedLayout, §10)
+and ride the same shard_map exchange via ``exchange_streams``.
 
 Mapping (one ``ShardExec`` per mesh):
 
@@ -147,12 +149,14 @@ class ShardExec:
         return shard_map(local, mesh=self.mesh, in_specs=(spec,),
                          out_specs=self.group_spec(), check_rep=False)
 
-    # -- codec-free mixing (opt-state moments) ----------------------------
+    # -- codec-free mixing ------------------------------------------------
 
     def mix(self, exch):
         """Sharded ``Exchange.mix`` for ONE (G, Np) buffer: psum-mean for
         server/async, k hops of all_gather + this group's W row for
-        ring/gossip (moments ride codec-free at fp32, DESIGN.md §8)."""
+        ring/gossip. Identity-codec streams ride these same ops inside
+        ``exchange_streams`` (DESIGN.md §10); kept as the standalone
+        codec-free utility (and the §10 bit-exactness reference)."""
         if exch.topology == "none":
             return lambda x: x
         spec = self.buf_spec()
@@ -179,97 +183,167 @@ class ShardExec:
 
     # -- the communication step -------------------------------------------
 
-    def exchange(self, exch, layout: packing.Layout):
-        """shard_map'd ``Exchange.params``: (x_G, x0_G, comm_state) ->
-        (mixed_x_G, new_comm_state), semantics-matched to the replicated
-        path (incl. per-hop recompression for decentralized lossy rounds).
-        Codec handling on the local shard:
+    def exchange_streams(self, exch, layout: packing.Layout):
+        """shard_map'd ``Exchange.streams`` (DESIGN.md §10): every stream
+        of the round's payload — params plus averaged moment buffers —
+        goes through ITS codec and the topology inside ONE shard_map
+        block, semantics-matched to the replicated path (incl. per-hop
+        recompression for decentralized lossy rounds, per-stream codec
+        state, and per-stream async staleness buffers). Codec handling on
+        the local shard:
 
         * fp32 / topology "none": no codec work (bit-exact semantics),
         * fp16/bf16: element-wise cast on the local block (identical
           values to the replicated path by construction),
         * int8: noise generated OUTSIDE at the full rows shape via
-          ``Codec.noise`` — per-chunk scales and rounding bits match the
-          replicated path bit-for-bit on every shard,
+          ``Codec.noise``, per stream from that stream's rng counter —
+          per-chunk scales and rounding bits match the replicated path
+          bit-for-bit on every shard,
         * topk: refused (global per-group selection; see module doc).
+
+        Returns ``fn(xs, xs0, comm_state) -> (mixed, new_comm_state)``
+        over ``{stream: (G, Np) buffer}`` dicts.
         """
-        codec = exch.codec
-        if not codec.shardable:
-            raise NotImplementedError(
-                f"codec {codec.name!r} is not shardable: its payload is a "
-                "global per-group selection with an error-feedback "
-                "residual — run it on the replicated path (DESIGN.md §9)")
-        lossy = (not codec.identity) and exch.topology != "none"
-        chunked = lossy and codec.chunk > 0
-        if chunked:
-            self.check_layout(layout, codec.chunk)
-        else:
-            self.check_layout(layout)
+        for c in (exch.codec, exch.mcodec):
+            if not (c.shardable or c.identity):
+                raise NotImplementedError(
+                    f"codec {c.name!r} is not shardable: its payload is a "
+                    "global per-group selection with an error-feedback "
+                    "residual — run it on the replicated path "
+                    "(DESIGN.md §9)")
+        for c in (exch.codec, exch.mcodec):
+            if (not c.identity) and c.chunk > 0:
+                self.check_layout(layout, c.chunk)
+        self.check_layout(layout)
         hops = exch.mix_rounds if exch.w is not None else 1
-        n_compress = hops if (lossy and exch.w is not None) else (
-            1 if lossy else 0)
         spec = self.buf_spec()
         gax = self._entry(self.group_axes)
         sax = self._entry(self.shard_axes)
         w = None if exch.w is None else jnp.asarray(exch.w, jnp.float32)
         G = self.n_groups
-        chunk = codec.chunk
+        dummy_spec = P(None, None)
 
-        def compress_local(y, ref, u):
+        def is_lossy(codec):
+            return (not codec.identity) and exch.topology != "none"
+
+        def compress_local(codec, y, ref, u):
             d = y - ref
-            if chunked:
-                rows = d.reshape(-1, chunk)
+            if codec.chunk > 0:
+                rows = d.reshape(-1, codec.chunk)
                 out = codec.compress_rows(rows, u.reshape(rows.shape))
                 return ref + out.reshape(d.shape)
             d_hat, _ = codec.compress(d, {})
             return ref + d_hat
 
-        def local(x, x0, us, pushed, rnd):
-            if w is not None:                      # ring / gossip
-                y, ref = x, x0
-                for h in range(hops):
-                    if lossy:
-                        y = compress_local(y, ref, us[h] if chunked
-                                           else None)
-                        ref = y
-                    y = self._mix_hop(y, w, gax)
-                return y, pushed
-            y = compress_local(x, x0, us[0] if chunked else None) \
-                if lossy else x
-            if exch.topology == "async_stale":
-                keep = ((self._gidx() + rnd) % (exch.staleness + 1)) == 0
-                pushed = jnp.where(keep, y, pushed)
-                return jax.lax.pmean(pushed, gax), pushed
-            if exch.topology == "none":
-                return y, pushed
-            return jax.lax.pmean(y, gax), pushed   # server
-
-        def fn(x_G, x0_G, comm_state):
+        def fn(xs, xs0, comm_state):
+            names = tuple(xs)
+            codecs = {k: exch.stream_codec(k) for k in names}
+            lossy = {k: is_lossy(codecs[k]) for k in names}
+            chunked = {k: lossy[k] and codecs[k].chunk > 0 for k in names}
+            n_compress = {k: (hops if (lossy[k] and w is not None)
+                              else (1 if lossy[k] else 0)) for k in names}
             new_state = dict(comm_state)
-            us = jnp.zeros((1, 1), jnp.float32)    # placeholder
-            us_spec = P(None, None)
-            if chunked:
-                cnt = comm_state["codec"]["count"]
+            cstates = dict(comm_state.get("codec", {}))
+
+            def local(xs_t, x0s_t, us_t, pushed_t, rnd):
+                outs, new_pushed = [], []
+                for i, k in enumerate(names):
+                    codec, x, x0 = codecs[k], xs_t[i], x0s_t[i]
+                    if w is not None:              # ring / gossip
+                        y, ref = x, x0
+                        for h in range(hops):
+                            if lossy[k]:
+                                y = compress_local(
+                                    codec, y, ref,
+                                    us_t[i][h] if chunked[k] else None)
+                                ref = y
+                            y = self._mix_hop(y, w, gax)
+                        outs.append(y)
+                        new_pushed.append(pushed_t[i])
+                        continue
+                    y = compress_local(codec, x, x0,
+                                       us_t[i][0] if chunked[k] else None) \
+                        if lossy[k] else x
+                    if exch.topology == "async_stale":
+                        keep = ((self._gidx() + rnd)
+                                % (exch.staleness + 1)) == 0
+                        p = jnp.where(keep, y, pushed_t[i])
+                        new_pushed.append(p)
+                        outs.append(jax.lax.pmean(p, gax))
+                    elif exch.topology == "none":
+                        outs.append(y)
+                        new_pushed.append(pushed_t[i])
+                    else:                          # server
+                        outs.append(jax.lax.pmean(y, gax))
+                        new_pushed.append(pushed_t[i])
+                return tuple(outs), tuple(new_pushed)
+
+            dummy = jnp.zeros((1, 1), jnp.float32)
+            us, us_specs = [], []
+            for k in names:
+                if not chunked[k]:
+                    us.append(dummy)
+                    us_specs.append(dummy_spec)
+                    continue
+                chunk = codecs[k].chunk
+                cnt = comm_state["codec"][k]["count"]
                 rows_shape = (G * layout.padded // chunk, chunk)
-                us = jnp.stack([codec.noise(cnt + h, rows_shape)
-                                .reshape(G, -1, chunk)
-                                for h in range(n_compress)])
-                us_spec = P(None, self._entry(self.group_axes), sax, None)
-                new_state["codec"] = {"count": cnt + n_compress}
-            pushed = comm_state.get("pushed", jnp.zeros((1, 1), jnp.float32))
-            pushed_spec = spec if "pushed" in comm_state else P(None, None)
+                us.append(jnp.stack([codecs[k].noise(cnt + h, rows_shape)
+                                     .reshape(G, -1, chunk)
+                                     for h in range(n_compress[k])]))
+                us_specs.append(P(None, gax, sax, None))
+                cstates[k] = {"count": cnt + n_compress[k]}
+            if any(chunked.values()):
+                new_state["codec"] = cstates
+            stale = exch.topology == "async_stale"
+            pushed, pushed_specs = [], []
+            for k in names:
+                if not stale:
+                    pushed.append(dummy)
+                    pushed_specs.append(dummy_spec)
+                    continue
+                pushed.append(comm_state["pushed"] if k == "params"
+                              else comm_state["pushed_opt"][k])
+                pushed_specs.append(spec)
             rnd = comm_state.get("round", jnp.zeros((), jnp.int32))
-            x0 = x0_G if lossy else x_G            # unused when not lossy
+            x0s = tuple(xs0.get(k, xs[k]) for k in names)  # dummy when
+            # the stream is not lossy (never read inside the block)
             f = shard_map(local, mesh=self.mesh,
-                          in_specs=(spec, spec, us_spec, pushed_spec, P()),
-                          out_specs=(spec, pushed_spec), check_rep=False)
-            mixed, new_pushed = f(x_G, x0, us, pushed, rnd)
-            if exch.topology == "async_stale":
-                new_state["pushed"] = new_pushed
+                          in_specs=((spec,) * len(names),
+                                    (spec,) * len(names),
+                                    tuple(us_specs), tuple(pushed_specs),
+                                    P()),
+                          out_specs=((spec,) * len(names),
+                                     tuple(pushed_specs)),
+                          check_rep=False)
+            mixed_t, new_pushed = f(tuple(xs[k] for k in names), x0s,
+                                    tuple(us), tuple(pushed), rnd)
+            mixed = dict(zip(names, mixed_t))
+            if stale:
+                new_state["pushed"] = new_pushed[names.index("params")]
+                mnames = [k for k in names if k != "params"]
+                if mnames:
+                    po = dict(comm_state["pushed_opt"])
+                    for k in mnames:
+                        po[k] = new_pushed[names.index(k)]
+                    new_state["pushed_opt"] = po
                 new_state["round"] = rnd + 1
             return mixed, new_state
 
         return fn
+
+    def exchange(self, exch, layout: packing.Layout):
+        """Single-stream convenience wrapper over ``exchange_streams``:
+        (x_G, x0_G, comm_state) -> (mixed_x_G, new_comm_state) for the
+        params buffer only (the pre-§10 signature, kept for tests)."""
+        fn = self.exchange_streams(exch, layout)
+
+        def one(x_G, x0_G, comm_state):
+            xs0 = {} if x0_G is None else {"params": x0_G}
+            mixed, new_state = fn({"params": x_G}, xs0, comm_state)
+            return mixed["params"], new_state
+
+        return one
 
 
 def plan_for(mesh: Mesh, require: bool = False) -> Optional[ShardExec]:

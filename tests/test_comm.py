@@ -270,18 +270,21 @@ def test_decentral_lossy_recompresses_per_hop(key):
     x = jax.random.normal(key, (8, 512)) * 0.1
     state = ex.init(x0)
     _, state = ex.params(x, x0, state)
-    assert int(state["codec"]["count"]) == k      # one compress per hop
+    # per-stream codec state (DESIGN.md §10): the params stream's rng
+    # counter advances once per hop
+    assert int(state["codec"]["params"]["count"]) == k
     # top-k per-hop error feedback: after the round, delta-minus-residual
     # equals the sum of everything transmitted (nothing lost, only delayed)
     ex_t = comm.get_exchange("ring", "topk", 8, mix_rounds=2,
                              topk_frac=0.1)
     state_t = ex_t.init(x0)
     out_t, state_t = ex_t.params(x, x0, state_t)
-    assert bool(jnp.all(jnp.isfinite(state_t["codec"]["residual"])))
+    resid = state_t["codec"]["params"]["residual"]
+    assert bool(jnp.all(jnp.isfinite(resid)))
     # mean preservation still holds under per-hop top-k: the mixing is
     # doubly stochastic over the DECODED payloads, so the output mean is
     # the input mean minus exactly what still sits in the residual
-    want = jnp.mean(x - state_t["codec"]["residual"], axis=0)
+    want = jnp.mean(x - resid, axis=0)
     np.testing.assert_allclose(jnp.mean(out_t, 0), want,
                                rtol=1e-4, atol=1e-5)
 
@@ -449,15 +452,53 @@ def test_flat_only_codec_needs_layout(key):
                 exchange=comm.get_exchange("server", codec, G))
 
 
-def test_async_stale_refuses_opt_state_averaging(key):
-    params, _ = make_problem(key)
+def test_async_stale_averages_opt_state_with_staleness_buffers(key):
+    """The lifted restriction (DESIGN.md §10): async_stale keeps one
+    staleness buffer PER STREAM (params under "pushed", each moment under
+    "pushed_opt"), so rounds may average opt state. The moments follow
+    the same deterministic push schedule as the params."""
+    params, batch = make_problem(key)
     layout = packing.layout_of(params)
+    opt = optim.packed("momentum", 0.05, impl="jnp")
     cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)  # avg_opt default
-    with pytest.raises(NotImplementedError):
-        lsgd.make_local_round(
-            quad_loss, optim.packed("sgd", 0.1, impl="jnp"), cfg,
-            layout=layout,
-            exchange=comm.get_exchange("async_stale", "fp32", G))
+    ex = comm.get_exchange("async_stale", "fp32", G, staleness=1)
+    assert ex.supports_opt_state_averaging
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    assert set(st["comm"]) == {"pushed", "pushed_opt", "round"}
+    assert st["comm"]["pushed_opt"]["mu"].shape == st["params"].shape
+    # numpy re-simulation of the per-stream staleness schedule
+    pushed_ref = {"params": np.asarray(st["params"]).copy(),
+                  "mu": np.asarray(st["opt"]["mu"]).copy()}
+    for rnd_i in range(4):
+        pre = {"params": st["params"], "mu": st["opt"]["mu"]}
+        st, _ = rnd(st, batch)
+        fresh = (np.arange(G) + rnd_i) % 2 == 0
+        # re-run the local steps without comm to get this round's locals
+        ex_none = comm.get_exchange("none", "fp32", G)
+        rnd_none = jax.jit(lsgd.make_local_round(
+            quad_loss, opt, cfg, layout=layout, exchange=ex_none))
+        loc, _ = rnd_none({"params": pre["params"],
+                           "opt": {"count": st["opt"]["count"] - 2,
+                                   "mu": pre["mu"]}}, batch)
+        for name, val in (("params", loc["params"]),
+                          ("mu", loc["opt"]["mu"])):
+            pushed_ref[name][fresh] = np.asarray(val)[fresh]
+        np.testing.assert_allclose(
+            np.asarray(st["params"]),
+            np.broadcast_to(pushed_ref["params"].mean(0),
+                            st["params"].shape), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(st["opt"]["mu"]),
+            np.broadcast_to(pushed_ref["mu"].mean(0),
+                            st["opt"]["mu"].shape), rtol=1e-5, atol=1e-6)
+        # the NEXT round mixes from the refreshed buffers, so keep the
+        # reference in sync with what the round actually pushed
+        pushed_ref = {"params": np.asarray(st["comm"]["pushed"]).copy(),
+                      "mu": np.asarray(st["comm"]["pushed_opt"]["mu"])
+                      .copy()}
 
 
 def test_stateful_exchange_needs_init_state(key):
@@ -532,3 +573,247 @@ def test_unknown_names_raise():
         comm.get_codec("fp8")
     with pytest.raises(ValueError):
         comm.mixing_matrix("star", 4)
+
+
+# ---------------------------------------------------------------------------
+# multi-stream payloads: per-stream codec policy (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("opt_name", ["momentum", "adamw"])
+@pytest.mark.parametrize("topology", ["server", "ring"])
+def test_fp32_moment_codec_bit_exact_vs_map_moments(opt_name, topology,
+                                                    key):
+    """THE §10 parity gate (replicated): with moment_codec=fp32 the
+    stream exchange must be BIT-exact with the old map_moments path —
+    run the locals with no comm, then mix params and moments by hand
+    with exch.params + optim.map_moments(exch.mix) and compare."""
+    params, batch = make_problem(key)
+    layout = packing.layout_of(params)
+    opt = optim.packed(opt_name, 0.03, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=3)
+    ex = comm.get_exchange(topology, "fp32", G, mix_rounds=2)
+    assert ex.mcodec.identity
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    rnd_none = jax.jit(lsgd.make_local_round(
+        quad_loss, opt, cfg, layout=layout,
+        exchange=comm.get_exchange("none", "fp32", G)))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout)
+    locals_, _ = rnd_none(jax.tree.map(jnp.copy, st), batch)
+    got, _ = rnd(st, batch)
+    want_p, _ = ex.params(locals_["params"], None, {})
+    want_o = optim.map_moments(ex.mix, locals_["opt"])
+    np.testing.assert_array_equal(np.asarray(got["params"]),
+                                  np.asarray(want_p))
+    for k in locals_["opt"]:
+        np.testing.assert_array_equal(np.asarray(got["opt"][k]),
+                                      np.asarray(want_o[k]), err_msg=k)
+
+
+def test_moment_codec_wire_accounting_per_stream():
+    """Per-stream accounting (§10): each moment stream through the
+    moment codec (the fp32 surcharge is gone), old totals == sums."""
+    n = 1024
+    ms = {"m": n, "v": n}
+    ex = comm.get_exchange("server", "int8", G, moment_codec="int8")
+    pb = n + 4 * 4                      # int8 payload: 4 chunks of 256
+    by = ex.wire_bytes_by_stream(n, ms)
+    assert by == {"params": 2 * G * pb, "m": 2 * G * pb, "v": 2 * G * pb}
+    assert ex.wire_bytes_per_round(n, moment_sizes=ms) \
+        == sum(by.values())
+    assert ex.wire_bytes_up(n, moment_sizes=ms) == 3 * G * pb
+    assert ex.wire_bytes_down(n, moment_sizes=ms) == 3 * G * pb
+    # bf16 moments: 2 bytes/elem while params stay int8
+    ex2 = comm.get_exchange("server", "int8", G, moment_codec="bf16")
+    by2 = ex2.wire_bytes_by_stream(n, ms)
+    assert by2["params"] == 2 * G * pb
+    assert by2["m"] == by2["v"] == 2 * G * 2 * n
+    # legacy single-blob moment_elems stays the old fp32 number
+    ex3 = comm.get_exchange("server", "int8", G)
+    assert ex3.wire_bytes_up(n, moment_elems=2 * n) == \
+        G * (pb + 4 * 2 * n)
+    # p2p totals count each edge payload once, per stream too
+    ex4 = comm.get_exchange("ring", "fp32", G, moment_codec="bf16")
+    by4 = ex4.wire_bytes_by_stream(n, ms)
+    assert by4["params"] == 8 * 4 * n           # G=4 ring: 8 edges
+    assert by4["m"] == 8 * 2 * n
+    assert ex4.wire_bytes_per_round(n, moment_sizes=ms) == \
+        ex4.wire_bytes_up(n, moment_sizes=ms)
+
+
+def test_moment_codec_round_metrics_per_stream(key):
+    """Round metrics report wire_bytes/<stream> with the totals as exact
+    sums (adamw: params + m + v through their own codecs)."""
+    params, batch = make_problem(key)
+    layout = packing.layout_of(params)
+    n = layout.size
+    opt = optim.packed("adamw", 0.01, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    ex = comm.get_exchange("server", "int8", G, moment_codec="int8")
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    _, m = rnd(st, batch)
+    by = ex.wire_bytes_by_stream(n, {"m": n, "v": n})
+    for k, v in by.items():
+        assert int(m[f"wire_bytes/{k}"]) == v, k
+    assert int(m["wire_bytes"]) == sum(by.values())
+    assert int(m["wire_bytes"]) == (int(m["wire_bytes_up"])
+                                    + int(m["wire_bytes_down"]))
+    # vs the old accounting: moments no longer ride at 4 bytes/elem
+    old_total = comm.get_exchange("server", "int8", G).wire_bytes_per_round(
+        n, moment_elems=2 * n)
+    assert int(m["wire_bytes"]) < old_total
+
+
+def test_moment_codec_per_stream_state(key):
+    """Each stream keeps its OWN codec state: adamw + int8 everywhere
+    gives three rng counters (params/m/v), all advancing per round."""
+    params, batch = make_problem(key)
+    layout = packing.layout_of(params)
+    opt = optim.packed("adamw", 0.01, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    ex = comm.get_exchange("server", "int8", G, moment_codec="int8")
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    assert set(st["comm"]["codec"]) == {"params", "m", "v"}
+    for _ in range(3):
+        st, _ = rnd(st, batch)
+    for k in ("params", "m", "v"):
+        assert int(st["comm"]["codec"][k]["count"]) == 3, k
+
+
+@pytest.mark.parametrize("moment_codec", ["bf16", "int8"])
+def test_lossy_moment_codec_converges_and_tracks_fp32(moment_codec, key):
+    """Lossy moment codecs on the feasibility problem: delta coding makes
+    the moment quantization error vanish with convergence — the run
+    converges AND tracks the fp32-moments run closely."""
+    params, batch = make_problem(key, r=3, d=8)
+    layout = packing.layout_of(params)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=4)
+    outs = {}
+    for mc in ("fp32", moment_codec):
+        opt = optim.packed("momentum", 0.05, impl="jnp")
+        ex = comm.get_exchange("server", "int8", G, moment_codec=mc)
+        rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg,
+                                            layout=layout, exchange=ex))
+        st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                             exchange=ex)
+        st, m0 = rnd(st, batch)
+        for _ in range(80):
+            st, m = rnd(st, batch)
+        assert float(jnp.mean(m["grad_sq"])) < 1e-4 * float(
+            jnp.mean(m0["grad_sq"])), mc
+        outs[mc] = np.asarray(st["params"][0])
+    scale = np.abs(outs["fp32"]).max() + 1e-12
+    rel = np.abs(outs[moment_codec] - outs["fp32"]).max() / scale
+    assert rel <= 1e-2, (moment_codec, rel)
+
+
+def test_nonneg_moment_stream_clamped(key):
+    """adamw's v must never go negative through a lossy moment codec
+    (sqrt(v) would NaN): the round projects it back onto [0, inf)."""
+    params, batch = make_problem(key)
+    layout = packing.layout_of(params)
+    opt = optim.packed("adamw", 0.05, impl="jnp")
+    assert opt.moment_nonneg == ("v",)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    ex = comm.get_exchange("server", "int8", G, moment_codec="int8")
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    for _ in range(5):
+        st, _ = rnd(st, batch)
+        assert bool(jnp.all(st["opt"]["v"] >= 0.0))
+        assert bool(jnp.all(jnp.isfinite(st["params"])))
+
+
+def test_topk_moment_codec_refused():
+    """topk moments stay excluded (§10): error feedback would re-offer
+    rounds-stale moment mass."""
+    with pytest.raises(NotImplementedError):
+        comm.get_exchange("server", "fp32", G, moment_codec="topk")
+    with pytest.raises(NotImplementedError):
+        comm.get_exchange("ring", "int8", G, moment_codec="topk")
+
+
+def test_flat_only_moment_codec_needs_layout(key):
+    """int8 moments need the packed flat buffers; cast moment codecs
+    (bf16) run on the pytree path too."""
+    params, batch = make_problem(key)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    with pytest.raises(NotImplementedError):
+        lsgd.make_local_round(
+            quad_loss, optim.momentum(0.05), cfg,
+            exchange=comm.get_exchange("server", "fp32", G,
+                                       moment_codec="int8"))
+    # average_opt_state=False: the moment codec never runs -> no refusal
+    cfg_off = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2,
+                                  average_opt_state=False)
+    lsgd.make_local_round(
+        quad_loss, optim.momentum(0.05), cfg_off,
+        exchange=comm.get_exchange("server", "fp32", G,
+                                   moment_codec="int8"))
+    # bf16 moments on the pytree path: runs, and the moments move
+    ex = comm.get_exchange("server", "fp32", G, moment_codec="bf16")
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, optim.momentum(0.05),
+                                        cfg, exchange=ex))
+    st = lsgd.init_state(params, optim.momentum(0.05), n_groups=G)
+    out, m = rnd(st, batch)
+    assert bool(jnp.all(jnp.isfinite(jax.tree.leaves(out["opt"]["mu"])[0])))
+    # bf16 moments halve the moment wire term in the metrics
+    n = sum(l.size for l in jax.tree.leaves(params))
+    assert int(m["wire_bytes/mu"]) == 2 * G * 2 * n
+
+
+def test_adaptive_t_from_exchange_prices_moment_streams():
+    """AdaptiveT.from_exchange: r reflects the moment codec (§10) — int8
+    moments make comm cheaper, so r rises with the full stream payload
+    priced, not the fp32-moments assumption."""
+    from repro.core.controller import AdaptiveT
+
+    n = 1_000_000
+    ms = {"m": n, "v": n}
+    step = 2e-6
+    ctl_fp32 = AdaptiveT.from_exchange(
+        step, comm.get_exchange("server", "int8", 2), n, ms)
+    ctl_int8 = AdaptiveT.from_exchange(
+        step, comm.get_exchange("server", "int8", 2, moment_codec="int8"),
+        n, ms)
+    assert ctl_int8.r > 2.5 * ctl_fp32.r
+    ex = comm.get_exchange("server", "int8", 2, moment_codec="int8")
+    want = ex.wire_bytes_per_round(n, moment_sizes=ms)
+    assert abs(ctl_int8.r - step / (want / 50e9)) < 1e-12
+
+
+@pytest.mark.parametrize("s_stale", [1, 2])
+def test_async_avg_opt_state_converges(s_stale, key):
+    """The §10 acceptance run: async_stale with average_opt_state=True
+    (per-stream staleness buffers) converges on the convex feasibility
+    problem under bounded staleness s — moments riding the stale
+    averaging must not destabilize it."""
+    params, batch = make_problem(key, r=3, d=8)
+    layout = packing.layout_of(params)
+    opt = optim.packed("momentum", 0.05, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=4)  # avg_opt on
+    ex = comm.get_exchange("async_stale", "fp32", G, staleness=s_stale)
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg, layout=layout,
+                                        exchange=ex))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    st, m0 = rnd(st, batch)
+    for _ in range(120):
+        st, m = rnd(st, batch)
+    assert float(jnp.mean(m["grad_sq"])) < 1e-6 * float(
+        jnp.mean(m0["grad_sq"])), s_stale
+    # the staleness wire amortization prices the moment stream too:
+    # amortized senders G/(s+1) times the fp32 moment payload, up+down
+    n = layout.size
+    want = 2 * int(round(G / (s_stale + 1) * 4 * n))
+    assert int(m["wire_bytes/mu"]) == want
+    assert ex.wire_bytes_by_stream(n, {"mu": n})["mu"] == want

@@ -218,6 +218,70 @@ def test_packed_t_i_parity(key):
         np.testing.assert_allclose(b, a, rtol=1e-5, atol=1e-6)
 
 
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_packed_t_i_adamw_parity(impl, key):
+    """The PR-1 leftover, lifted (DESIGN.md §10): per-node t_i with a
+    count-dependent update runs the fused step vmapped over G with a
+    PER-GROUP count vector. Multi-round parity vs the pytree path for
+    params, moments, AND the per-group counters (count_g = r * t_i[g])."""
+    params, batch = make_problem(key)
+    G = 3
+    layout = packing.layout_of(params)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=8, t_i=(1, 4, 8))
+    opt_t = optim.adamw(0.01)
+    opt_p = optim.packed("adamw", 0.01, impl=impl)
+    rnd_t = jax.jit(lsgd.make_local_round(quad_loss, opt_t, cfg))
+    rnd_p = jax.jit(lsgd.make_local_round(quad_loss, opt_p, cfg,
+                                          layout=layout))
+    st = lsgd.init_state(params, opt_t, n_groups=G)
+    sp = lsgd.init_state(params, opt_p, n_groups=G, layout=layout)
+    for _ in range(2):
+        st, mt = rnd_t(st, batch)
+        sp, mp = rnd_p(sp, batch)
+    assert list(np.asarray(mp["inner_steps"])) == [1, 4, 8]
+    # per-group counters stopped at t_i, matching the pytree masking
+    np.testing.assert_array_equal(np.asarray(sp["opt"]["count"]),
+                                  np.asarray(st["opt"]["count"]))
+    np.testing.assert_array_equal(np.asarray(sp["opt"]["count"]),
+                                  np.asarray([2, 8, 16], np.int32))
+    for a, b in zip(jax.tree.leaves(lsgd.server_params(st)),
+                    jax.tree.leaves(lsgd.server_params(sp, layout=layout))):
+        np.testing.assert_allclose(b, a, rtol=1e-5, atol=1e-6)
+    for mk in ("m", "v"):
+        for g in range(G):
+            ref = packing.pack(
+                jax.tree.map(lambda x: x[g], st["opt"][mk]), layout)
+            np.testing.assert_allclose(sp["opt"][mk][g], ref,
+                                       rtol=1e-5, atol=1e-7)
+
+
+def test_packed_t_i_schedule_parity(key):
+    """lr schedules are count-dependent too: under t_i they take the same
+    vmapped per-group-count path and match the pytree round."""
+    params, batch = make_problem(key)
+    G = 2
+    layout = packing.layout_of(params)
+    lr_fn = optim.cosine_schedule(0.1, warmup=2, total=20)
+    opt_t = optim.with_schedule(optim.sgd, lr_fn)
+    opt_p = optim.with_schedule(
+        lambda lr: optim.packed("sgd", lr, impl="jnp"), lr_fn)
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=4, t_i=(1, 4))
+    batch2 = {"A": batch["A"][:G], "b": batch["b"][:G]}
+    rnd_t = jax.jit(lsgd.make_local_round(quad_loss, opt_t, cfg))
+    rnd_p = jax.jit(lsgd.make_local_round(quad_loss, opt_p, cfg,
+                                          layout=layout))
+    st = lsgd.init_state(params, opt_t, n_groups=G)
+    sp = lsgd.init_state(params, opt_p, n_groups=G, layout=layout)
+    for _ in range(2):
+        st, _ = rnd_t(st, batch2)
+        sp, _ = rnd_p(sp, batch2)
+    np.testing.assert_array_equal(np.asarray(sp["opt"]["count"]),
+                                  np.asarray(st["opt"]["count"]))
+    for a, b in zip(jax.tree.leaves(lsgd.server_params(st)),
+                    jax.tree.leaves(lsgd.server_params(sp, layout=layout))):
+        np.testing.assert_allclose(b, a, rtol=1e-5, atol=1e-6)
+
+
 def test_packed_sync_step_parity(key):
     params, batch = make_problem(key)
     layout = packing.layout_of(params)
@@ -250,7 +314,10 @@ def test_final_metrics_contract(key):
     sp = lsgd.init_state(params, opt_p, n_groups=G, layout=layout)
     new_sp, m = rnd(sp, batch)
     assert set(m) == {"loss", "inner_steps", "grad_sq", "wire_bytes",
-                      "wire_bytes_up", "wire_bytes_down"}
+                      "wire_bytes_up", "wire_bytes_down",
+                      "wire_bytes/params"}
+    # per-stream split sums to the old total (sgd: params only)
+    assert int(m["wire_bytes/params"]) == int(m["wire_bytes"])
     # the traj round reports the gradient made AT step T-1; final mode is
     # one descent update later, so on this convex problem it must be <=
     cfg_traj = dataclasses.replace(cfg, metrics="traj")
@@ -319,33 +386,12 @@ def test_packed_unsupported_modes_raise(key):
             lsgd.LocalSGDConfig(n_groups=2, inner_steps=2, threshold=1e-3),
             layout=layout)
     with pytest.raises(NotImplementedError):
-        lsgd.make_local_round(
-            quad_loss, optim.packed("adamw", 0.1),
-            lsgd.LocalSGDConfig(n_groups=2, inner_steps=2, t_i=(1, 2)),
-            layout=layout)
-    with pytest.raises(NotImplementedError):
         # the pytree path silently ignores t_i under microbatch; the
         # packed path refuses rather than silently diverging from it
         lsgd.make_local_round(
             quad_loss, opt_p,
             lsgd.LocalSGDConfig(n_groups=2, inner_steps=2, t_i=(1, 2),
                                 inner_mode="microbatch"),
-            layout=layout)
-    with pytest.raises(NotImplementedError):
-        # wrappers rename ("adamw+sched") — the guard must still fire
-        lsgd.make_local_round(
-            quad_loss,
-            optim.with_schedule(lambda lr: optim.packed("adamw", lr),
-                                optim.cosine_schedule(0.1, 2, 20)),
-            lsgd.LocalSGDConfig(n_groups=2, inner_steps=2, t_i=(1, 2)),
-            layout=layout)
-    with pytest.raises(NotImplementedError):
-        # lr schedules depend on the shared count too — t_i must refuse
-        lsgd.make_local_round(
-            quad_loss,
-            optim.with_schedule(lambda lr: optim.packed("sgd", lr),
-                                optim.cosine_schedule(0.1, 2, 20)),
-            lsgd.LocalSGDConfig(n_groups=2, inner_steps=2, t_i=(1, 2)),
             layout=layout)
 
 
@@ -409,3 +455,81 @@ def test_fused_ops_donation_memory_analysis():
     lowered = ops.fused_sgd.lower(p, p, 1e-3)
     ma = lowered.compile().memory_analysis()
     assert ma.alias_size_in_bytes >= n * 4
+
+
+# ---------------------------------------------------------------------------
+# StreamLayout: the multi-stream payload contract (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def test_stream_layout_contract(key):
+    params, _ = make_problem(key)
+    layout = packing.layout_of(params)
+    for name, streams in (("sgd", ("params",)),
+                          ("momentum", ("params", "mu")),
+                          ("adamw", ("params", "m", "v"))):
+        opt = optim.packed(name, 0.1, impl="jnp")
+        sl = packing.stream_layout_for(opt, layout)
+        assert sl.streams == streams
+        assert sl.moment_streams == streams[1:]
+        assert sl.n_streams == len(streams)
+        assert sl.sizes() == {s: layout.padded for s in streams}
+        # abstract matches what opt.init actually allocates
+        buf_G = layout.abstract((3,))
+        opt_abs = jax.eval_shape(opt.init, buf_G)
+        abs_ = sl.abstract((3,))
+        for s in sl.moment_streams:
+            assert opt_abs[s].shape == abs_[s].shape
+    # the declared streams ARE the state's non-count keys
+    opt = optim.packed("adamw", 0.1, impl="jnp")
+    state = opt.init(packing.pack(params, layout))
+    assert set(opt.moment_keys) == set(state) - {"count"}
+
+
+def test_stream_layout_stacked_view(key):
+    """stack/unstack: one (S, ..., Np) view of the whole payload for
+    fused whole-payload kernels — round-trips exactly, streams in
+    declared order."""
+    params, _ = make_problem(key)
+    layout = packing.shard_layout(packing.layout_of(params), 2, align=64)
+    opt = optim.packed("adamw", 0.1, impl="jnp")
+    sl = packing.stream_layout_for(opt, layout)
+    G = 3
+    ks = jax.random.split(key, sl.n_streams)
+    bufs = {name: jax.random.normal(k, (G, layout.padded))
+            for name, k in zip(sl.streams, ks)}
+    stacked = sl.stack(bufs)
+    assert stacked.shape == (3, G, layout.padded)
+    np.testing.assert_array_equal(stacked[sl.index("m")], bufs["m"])
+    back = sl.unstack(stacked)
+    for name in sl.streams:
+        np.testing.assert_array_equal(back[name], bufs[name])
+
+
+def test_builder_meta_wire_bytes_by_stream():
+    """The packed builder's meta resolves wire bytes per stream and the
+    totals are exact sums (adamw + int8 moments)."""
+    from repro.configs.base import get_config, InputShape
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.steps import build_train_step
+
+    from repro import comm
+
+    cfg = get_config("paper-mlp").reduced()
+    mesh = make_local_mesh(1, 1)
+    shape = InputShape(name="tiny", kind="train", global_batch=4,
+                       seq_len=8)
+    built = build_train_step(cfg, shape, mesh, t_inner=2, opt_name="adamw",
+                             packed=True, codec="int8",
+                             moment_codec="int8")
+    meta = built.meta
+    assert meta["streams"] == ["params", "m", "v"]
+    by = meta["wire_bytes_per_round_by_stream"]
+    assert set(by) == {"params", "m", "v"}
+    assert meta["wire_bytes_per_round"] == sum(by.values())
+    n = meta["n_flat_padded"]
+    ex = comm.get_exchange("server", "int8", meta["groups"],
+                           moment_codec="int8")
+    assert by == ex.wire_bytes_by_stream(n, {"m": n, "v": n})
+    # comm state carries the three per-stream rng counters
+    assert set(built.args[0]["comm"]["codec"]) == {"params", "m", "v"}

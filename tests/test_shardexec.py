@@ -318,7 +318,8 @@ def test_sharded_int8_exchange_matches_replicated(key):
     out_r, st_r = jax.jit(ex.params)(x, x0, state)
     np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_r),
                                rtol=1e-6, atol=1e-7)
-    assert int(st_s["codec"]["count"]) == int(st_r["codec"]["count"]) == 1
+    assert int(st_s["codec"]["params"]["count"]) \
+        == int(st_r["codec"]["params"]["count"]) == 1
 
 
 @needs8
@@ -488,6 +489,131 @@ def test_sharded_matches_replicated_builder_end_to_end(key):
                                                layout=layout))[0])
     np.testing.assert_allclose(outs["sharded"], outs["replicated"],
                                rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# multi-stream payloads on the sharded path (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+@needs8
+@pytest.mark.parametrize("opt_name", ["momentum", "adamw"])
+@pytest.mark.parametrize("topo", ["server", "ring"])
+def test_sharded_stream_parity_moment_codec(opt_name, topo, key):
+    """The §10 sharded parity gate: moments ride their own int8 codec
+    inside the shard_map exchange — multi-round sharded packed rounds
+    (Pallas kernels) match the replicated path <= 1e-5 rel on params AND
+    every moment stream (the int8 noise is per-stream, generated outside
+    at full rows shape, so the codec bits are identical)."""
+    mesh = mesh8()
+    sexec = shx.plan_for(mesh)
+    params, batch = make_problem(key)
+    layout = packing.shard_layout(packing.layout_of(params),
+                                  sexec.n_shards)
+    ex = comm.get_exchange(topo, "int8", G, mix_rounds=2, impl="jnp",
+                           moment_codec="int8")
+    opt_s = optim.get(opt_name, 0.03, packed=True, impl="pallas")
+    opt_r = optim.get(opt_name, 0.03, packed=True, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=3, metrics="traj")
+    rnd_s = jax.jit(lsgd.make_local_round(quad_loss, opt_s, cfg,
+                                          layout=layout, exchange=ex,
+                                          shardexec=sexec))
+    rnd_r = jax.jit(lsgd.make_local_round(quad_loss, opt_r, cfg,
+                                          layout=layout, exchange=ex))
+    ss = lsgd.init_state(params, opt_s, n_groups=G, layout=layout,
+                         exchange=ex)
+    sr = lsgd.init_state(params, opt_r, n_groups=G, layout=layout,
+                         exchange=ex)
+    assert set(ss["comm"]["codec"]) == {"params"} | set(opt_s.moment_keys)
+    for _ in range(3):
+        ss, ms = rnd_s(ss, batch)
+        sr, mr = rnd_r(sr, batch)
+    scale = float(jnp.max(jnp.abs(sr["params"]))) + 1e-12
+    err = float(jnp.max(jnp.abs(ss["params"] - sr["params"]))) / scale
+    assert err <= 1e-5, (opt_name, topo, err)
+    for k in opt_s.moment_keys:
+        m_scale = float(jnp.max(jnp.abs(sr["opt"][k]))) + 1e-12
+        m_err = float(jnp.max(jnp.abs(ss["opt"][k] - sr["opt"][k])))
+        assert m_err / m_scale <= 1e-5, (opt_name, topo, k)
+        # per-stream rng counters advanced identically on both paths
+        np.testing.assert_array_equal(
+            np.asarray(ss["comm"]["codec"][k]["count"]),
+            np.asarray(sr["comm"]["codec"][k]["count"]))
+    np.testing.assert_allclose(np.asarray(ms["grad_sq_traj"]),
+                               np.asarray(mr["grad_sq_traj"]),
+                               rtol=1e-4, atol=1e-8)
+
+
+@needs8
+def test_sharded_fp32_moments_bit_exact_vs_mix(key):
+    """§10 bit-exactness on the sharded path: with moment_codec=fp32 the
+    stream exchange's moment mixing is the SAME psum-mean ops as the old
+    shardexec.mix — compare the round's moments against mixing the
+    no-comm locals by hand, bit for bit."""
+    mesh = mesh8()
+    sexec = shx.plan_for(mesh)
+    params, batch = make_problem(key)
+    layout = packing.shard_layout(packing.layout_of(params),
+                                  sexec.n_shards)
+    opt = optim.get("momentum", 0.05, packed=True, impl="pallas")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)
+    ex = comm.get_exchange("server", "fp32", G)
+    ex_none = comm.get_exchange("none", "fp32", G)
+    rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg,
+                                        layout=layout, exchange=ex,
+                                        shardexec=sexec))
+    rnd_none = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg,
+                                             layout=layout,
+                                             exchange=ex_none,
+                                             shardexec=sexec))
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout)
+    locals_, _ = rnd_none(jax.tree.map(jnp.copy, st), batch)
+    got, _ = rnd(st, batch)
+    mix = sexec.mix(ex)
+    np.testing.assert_array_equal(np.asarray(got["opt"]["mu"]),
+                                  np.asarray(jax.jit(mix)(
+                                      locals_["opt"]["mu"])))
+    np.testing.assert_array_equal(np.asarray(got["params"]),
+                                  np.asarray(jax.jit(mix)(
+                                      locals_["params"])))
+
+
+@needs8
+def test_sharded_async_avg_opt_parity(key):
+    """async_stale + average_opt_state=True on the sharded path (§10):
+    per-stream staleness buffers shard like the params; masked refresh +
+    psum-mean of params AND moments match the replicated path."""
+    mesh = mesh8()
+    sexec = shx.plan_for(mesh)
+    params, batch = make_problem(key)
+    layout = packing.shard_layout(packing.layout_of(params),
+                                  sexec.n_shards)
+    ex = comm.get_exchange("async_stale", "fp32", G, staleness=1)
+    opt_s = optim.get("momentum", 0.05, packed=True, impl="pallas")
+    opt_r = optim.get("momentum", 0.05, packed=True, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=2)  # avg_opt on
+    rnd_s = jax.jit(lsgd.make_local_round(quad_loss, opt_s, cfg,
+                                          layout=layout, exchange=ex,
+                                          shardexec=sexec))
+    rnd_r = jax.jit(lsgd.make_local_round(quad_loss, opt_r, cfg,
+                                          layout=layout, exchange=ex))
+    ss = lsgd.init_state(params, opt_s, n_groups=G, layout=layout,
+                         exchange=ex)
+    sr = lsgd.init_state(params, opt_r, n_groups=G, layout=layout,
+                         exchange=ex)
+    assert set(ss["comm"]["pushed_opt"]) == {"mu"}
+    for _ in range(4):
+        ss, _ = rnd_s(ss, batch)
+        sr, _ = rnd_r(sr, batch)
+    for name, a, b in (("params", ss["params"], sr["params"]),
+                       ("mu", ss["opt"]["mu"], sr["opt"]["mu"]),
+                       ("pushed", ss["comm"]["pushed"],
+                        sr["comm"]["pushed"]),
+                       ("pushed_mu", ss["comm"]["pushed_opt"]["mu"],
+                        sr["comm"]["pushed_opt"]["mu"])):
+        scale = float(jnp.max(jnp.abs(b))) + 1e-12
+        assert float(jnp.max(jnp.abs(a - b))) / scale <= 1e-5, name
+    assert int(ss["comm"]["round"]) == 4
 
 
 # ---------------------------------------------------------------------------
