@@ -22,12 +22,18 @@ analysis. Two experiments, both through the packed round engine:
           momentum must converge absolutely; adamw reaches its
           optimizer floor (~lr^2) and every lossy moment codec must
           match the moments-fp32 row within 2x.
+  exchange_latency (embedded from benchmarks/exchange_latency.py,
+          DESIGN.md §11): exact ppermute-vs-all_gather hop bytes, the
+          fused-vs-staged epilogue timing, and — full runs — sharded
+          top-k convergence + the fig2 suite under sharded top-k.
 
 Headline (the acceptance bar): server topology, T=16 — int8 wire bytes
 >= 3.5x under fp32 AND int8 converges to the same tolerance; fig2 keeps
 slope < -0.5 and gsq_last < 1e-6 under int8; adamw params-int8 +
 moments-int8 cuts >= 2.5x total wire vs params-int8/moments-fp32 with
-convergence preserved.
+convergence preserved; ring G=16 hop bytes cut >= 3x by the ppermute
+neighbor exchange (exactly 7.5x) with sharded top-k matching replicated
+top-k convergence and the fig2 slope (headline_exchange).
 
 Writes experiments/bench/comm_bytes.json and the committed
 perf-trajectory artifact BENCH_comm_bytes.json on full runs.
@@ -269,6 +275,16 @@ def main() -> dict:
                   f"(moments {cell['moment_bytes_per_round']:>6,}B) "
                   f"gsq {cell['gsq_final']:.2e} "
                   f"{'ok' if cell['converged'] else '--'}", flush=True)
+    # ---- exchange engine: hop bytes + fused epilogue (DESIGN.md §11) ---
+    from benchmarks import exchange_latency
+    exch = exchange_latency.run(smoke=smoke)
+    print(f"  exchange: ring G=16 hop bytes "
+          f"{exch['headline']['ring_hop_bytes_reduction_G16']:.1f}x "
+          f"under all_gather (bar {exch['headline']['bar']}); fused "
+          f"epilogue server/int8 "
+          f"{exch['headline']['fused_epilogue_speedup_server_int8']:.2f}x"
+          f" {'ok' if exch['pass'] else '--'}", flush=True)
+
     a_fp32 = moments["server/adamw/params-int8/moments-fp32"]
     a_i8 = moments["server/adamw/params-int8/moments-int8"]
     moment_reduction = (a_fp32["wire_bytes_per_round"]
@@ -303,9 +319,12 @@ def main() -> dict:
             "fp32_moments_gsq": a_fp32["gsq_final"],
             "int8_moments_gsq": a_i8["gsq_final"],
         },
+        "exchange_latency": exch,
+        "headline_exchange": exch["headline"],
         "pass": bool(reduction >= 3.5 and fp32["converged"]
                      and i8["converged"] and fig2["int8"]["pass"]
-                     and moment_reduction >= 2.5 and moments_ok),
+                     and moment_reduction >= 2.5 and moments_ok
+                     and exch["pass"]),
         "backend": jax.default_backend(),
         "smoke": smoke,
     }

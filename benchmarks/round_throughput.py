@@ -330,8 +330,11 @@ def main() -> dict:
     # — runs in smoke too so CI exercises the shard_map wiring; a broken
     # child must FAIL the run, not record an error blob and stay green
     payload["sharded"] = _run_sharded_subprocess(max(3, reps // 2))
+    # smoke runs get their own artifact so they never clobber the
+    # committed full-run results (same rule as comm_bytes)
+    artifact = "round_throughput_smoke" if smoke else "round_throughput"
     if "error" in payload["sharded"]:
-        save_result("round_throughput", payload)
+        save_result(artifact, payload)
         raise SystemExit("sharded round-throughput child failed:\n"
                          + payload["sharded"]["error"])
     s = payload["sharded"]
@@ -340,7 +343,7 @@ def main() -> dict:
           f"{s['sharded']['steps_per_s']:.1f} st/s "
           f"({s['speedup_sharded_vs_replicated']:.2f}x; state/device "
           f"1/{s['per_device_state_reduction']:.0f})", flush=True)
-    save_result("round_throughput", payload)
+    save_result(artifact, payload)
     if not smoke:
         # the committed perf-trajectory artifact — full runs only, so CI
         # smoke runs never clobber it with reduced data

@@ -1,12 +1,23 @@
 """Benchmark driver: one entry per paper table/figure + the HLO-level
 communication/roofline reports. Prints ``name,seconds,derived`` CSV and
-writes JSON per benchmark into experiments/bench/."""
+writes JSON per benchmark into experiments/bench/.
+
+``--check`` is the perf-regression gate (ISSUE 5 satellite): it (1)
+validates the COMMITTED BENCH_*.json artifacts — their pass flags and
+every headline-vs-bar pair — and (2) re-runs the smoke benchmarks fresh
+in subprocesses, exiting nonzero if either the artifacts or the fresh
+numbers regress. CI's smoke job runs this, so a perf claim in the
+committed artifacts can't silently rot.
+"""
+import json
+import subprocess
 import sys
 import time
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+sys.path.insert(0, str(REPO_ROOT))
 
 from benchmarks import (ablation_opt_state, comm_bytes, comm_reduction,
                         fig2a_feasibility, fig2b_linear_rate,
@@ -46,11 +57,94 @@ BENCHES = [
     ("comm_bytes", comm_bytes.main,
      lambda r: f"int8 wire reduction="
                f"{r['headline']['int8_reduction_vs_fp32']:.2f}x (bar 3.5x)"
-               f" fig2_int8={'ok' if r['fig2']['int8']['pass'] else 'FAIL'}"),
+               f" fig2_int8={'ok' if r['fig2']['int8']['pass'] else 'FAIL'}"
+               f" hop_bytes="
+               f"{r['headline_exchange']['ring_hop_bytes_reduction_G16']:.1f}x"
+               " (bar 3x)"),
 ]
 
 
+# committed perf-trajectory artifacts: (section, value_key, bar_key)
+# pairs the --check gate compares. The bar rides IN the artifact, so a
+# regenerated artifact carries its own acceptance threshold.
+HEADLINE_BARS = {
+    "BENCH_round_throughput.json": [
+        ("headline", "speedup", "bar"),
+    ],
+    "BENCH_comm_bytes.json": [
+        ("headline", "int8_reduction_vs_fp32", "bar"),
+        ("headline_moments",
+         "int8_moments_reduction_vs_fp32_moments", "bar"),
+        ("headline_exchange", "ring_hop_bytes_reduction_G16", "bar"),
+    ],
+}
+
+# fresh smoke re-runs: (name, script, env toggles). Each script exits
+# nonzero when its (proportionally relaxed) smoke bars fail.
+SMOKE_RUNS = [
+    ("round_throughput", "benchmarks/round_throughput.py",
+     {"ROUND_THROUGHPUT_SMOKE": "1"}),
+    ("comm_bytes", "benchmarks/comm_bytes.py",
+     {"COMM_BYTES_SMOKE": "1"}),
+]
+
+
+def check() -> int:
+    """The regression gate: committed artifacts meet their own bars AND
+    fresh smoke runs still pass. Returns the number of failures."""
+    from benchmarks.common import child_env
+
+    failures = 0
+    print("== committed artifacts vs their bars ==")
+    for fname, pairs in HEADLINE_BARS.items():
+        path = REPO_ROOT / fname
+        if not path.exists():
+            print(f"  MISSING {fname}")
+            failures += 1
+            continue
+        art = json.loads(path.read_text())
+        ok = bool(art.get("pass"))
+        rows = []
+        for section, vkey, bkey in pairs:
+            sec = art.get(section, {})
+            val, bar = sec.get(vkey), sec.get(bkey)
+            if val is None or bar is None:
+                rows.append(f"{section}.{vkey}: MISSING")
+                ok = False
+                continue
+            meets = float(val) >= float(bar)
+            ok = ok and meets
+            rows.append(f"{section}.{vkey}={float(val):.2f} "
+                        f"(bar {float(bar)}) "
+                        f"{'ok' if meets else 'REGRESSED'}")
+        print(f"  {'PASS' if ok else 'FAIL'} {fname}: " + "; ".join(rows))
+        if not ok:
+            failures += 1
+    print("== fresh smoke runs ==")
+    for name, script, env_extra in SMOKE_RUNS:
+        env = child_env()
+        env.update(env_extra)
+        t0 = time.time()
+        r = subprocess.run([sys.executable, str(REPO_ROOT / script)],
+                           env=env, capture_output=True, text=True,
+                           timeout=3600, cwd=str(REPO_ROOT))
+        dt = time.time() - t0
+        if r.returncode != 0:
+            failures += 1
+            tail = ((r.stdout or "") + (r.stderr or ""))[-1500:]
+            print(f"  FAIL {name} ({dt:.0f}s)\n{tail}")
+        else:
+            print(f"  PASS {name} ({dt:.0f}s)")
+    if failures:
+        print(f"# {failures} perf-regression check(s) failed")
+    else:
+        print("# committed perf claims hold and smoke numbers reproduce")
+    return failures
+
+
 def main() -> None:
+    if "--check" in sys.argv:
+        sys.exit(1 if check() else 0)
     print("name,seconds,derived")
     failures = []
     for name, fn, fmt in BENCHES:

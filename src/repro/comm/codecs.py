@@ -58,10 +58,13 @@ class Codec:
     chunk: int = 0
     noise: Callable[[Any, tuple], Any] = None
     compress_rows: Callable[[Any, Any], Any] = None
-    # per-group state (top-k error-feedback residual) cannot be updated
-    # shard-locally AND the selection is a global per-group top-k — the
-    # shard_map exchange refuses these (DESIGN.md §9)
+    # codecs whose shard_map execution would change the payload refuse
+    # sharded execution (none currently: topk runs sharded through the
+    # distributed threshold selection — DESIGN.md §11)
     shardable: bool = True
+    # top-k selection fraction (0 for non-selective codecs); the sharded
+    # exchange reads it to size the distributed selection
+    topk_frac: float = 0.0
 
 
 def _no_state(_params_like):
@@ -116,12 +119,13 @@ def int8(chunk: int = 256, seed: int = 0, *, impl: str = "auto") -> Codec:
     def compress_rows(rows, u):
         """Quantize+dequantize (rows, chunk) with given noise — pure, so
         it is safe on a shard-local row slice (one fp32 scale per row;
-        rows never straddle shards under a chunk-aligned ShardedLayout)."""
+        rows never straddle shards under a chunk-aligned ShardedLayout).
+        The pallas impl is the FUSED qdq kernel (one VMEM pass instead of
+        the staged quantize + dequantize pair — DESIGN.md §11)."""
         if impl == "pallas":
             from repro.kernels import use_interpret
-            from repro.kernels.quantize import dequantize_int8, quantize_int8
-            q, scales = quantize_int8(rows, u, interpret=use_interpret())
-            return dequantize_int8(q, scales, interpret=use_interpret())
+            from repro.kernels.exchange_epilogue import qdq_int8
+            return qdq_int8(rows, u, interpret=use_interpret())
         amax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)
         scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
         q = jnp.clip(jnp.floor(rows / scale + u),
@@ -140,7 +144,7 @@ def int8(chunk: int = 256, seed: int = 0, *, impl: str = "auto") -> Codec:
                  chunk=chunk, noise=noise, compress_rows=compress_rows)
 
 
-def topk(frac: float = 0.05) -> Codec:
+def topk(frac: float = 0.05, *, impl: str = "auto") -> Codec:
     """Magnitude top-k sparsification with error feedback.
 
     Only the k = max(1, round(frac*N)) largest-|.| delta entries go on the
@@ -148,7 +152,21 @@ def topk(frac: float = 0.05) -> Codec:
     in a per-group residual and is re-offered next round. The accounting
     identity ``delta + residual_in == delta_hat + residual_out`` holds
     EXACTLY (the residual update is the same subtraction that defines it),
-    so compression drops nothing — it only delays it."""
+    so compression drops nothing — it only delays it.
+
+    Sharded execution (DESIGN.md §11): the shard_map exchange replaces
+    this exact global selection with the distributed threshold rule
+    (shard-local top-k bounds + psum'd bisection, at most k selected,
+    shard-local residual) — ``ShardExec.exchange_streams``; the residual
+    state shards like the params.
+
+    ``impl`` selects the fused thresh epilogue's kernel on the
+    replicated SERVER path (Exchange routes it through
+    ``exchange_epilogue.codec_mix(kind="thresh")`` — select + residual +
+    mean mix in one pass; ``compress`` below stays the staged exact-
+    selection reference used by ring/gossip per-hop rounds)."""
+    from repro.kernels import resolve_impl
+    impl = resolve_impl(impl)
 
     def init(params_like):
         return {"residual": jnp.zeros_like(params_like)}
@@ -168,7 +186,8 @@ def topk(frac: float = 0.05) -> Codec:
         return 8 * max(1, int(round(frac * n)))
 
     return Codec("topk", compress, wire_bytes, init,
-                 flat_only=True, stateful=True, shardable=False)
+                 flat_only=True, stateful=True, impl=impl,
+                 topk_frac=frac)
 
 
 CODECS = ("fp32", "fp16", "bf16", "int8", "topk")
@@ -185,5 +204,5 @@ def get_codec(name: str, *, impl: str = "auto", chunk: int = 256,
     if name == "int8":
         return int8(chunk=chunk, seed=seed, impl=impl)
     if name == "topk":
-        return topk(frac=topk_frac)
+        return topk(frac=topk_frac, impl=impl)
     raise ValueError(f"unknown codec {name!r} (have {CODECS})")

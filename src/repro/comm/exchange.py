@@ -71,10 +71,37 @@ class Exchange:
     # uncompressed, the pre-§10 behavior). topk is refused here — see
     # ``get_exchange``.
     moment_codec: Optional[codecs_mod.Codec] = None
+    # codec for the server/async DOWNLINK (the broadcast reply), applied
+    # to EVERY broadcast stream independently of the uplink codec
+    # (DESIGN.md §11). None (default) keeps today's behavior bit-exactly:
+    # the broadcast is idealized (no noise) and the accounting prices the
+    # downlink at the uplink codec's width. When set, the server
+    # re-encodes each round's mean as a delta vs its LAST decoded
+    # broadcast (reference + codec state under comm_state["down"]) and
+    # the accounting prices the downlink at THIS codec's width.
+    downlink_codec: Optional[codecs_mod.Codec] = None
+    # route int8/fp16/bf16 flat-buffer streams through the fused
+    # codec-mix epilogue (kernels/exchange_epilogue.py — one pass over
+    # the (G, N) buffer instead of the staged encode/decode/mix chain;
+    # bit-identical by contract). False = the staged reference path.
+    fused: bool = True
 
     @property
     def mcodec(self) -> codecs_mod.Codec:
         return self.moment_codec if self.moment_codec is not None else _FP32
+
+    @property
+    def lossy_downlink(self) -> bool:
+        # w is None: the broadcast-reply model only exists for mean
+        # topologies (server/async). On ring/gossip the edge payload IS
+        # the downlink and the mixed rows differ per group, so
+        # _apply_downlink's single-row encode would be wrong — a
+        # directly-constructed p2p exchange no-ops here (get_exchange
+        # refuses the combination up front with the reason)
+        return (self.downlink_codec is not None
+                and not self.downlink_codec.identity
+                and self.w is None
+                and self.topology != "none")
 
     def stream_codec(self, stream: str) -> codecs_mod.Codec:
         """The per-stream codec policy: params get ``codec``, every
@@ -86,6 +113,8 @@ class Exchange:
         base = f"{self.topology}/{self.codec.name}"
         if not self.mcodec.identity:
             base += f"+m:{self.mcodec.name}"
+        if self.downlink_codec is not None:
+            base += f"+d:{self.downlink_codec.name}"
         return base
 
     @property
@@ -93,7 +122,7 @@ class Exchange:
         if self.topology == "none":
             return False   # no wire: the codecs never run, no state
         return (self.topology == "async_stale" or self.codec.stateful
-                or self.mcodec.stateful)
+                or self.mcodec.stateful or self.lossy_downlink)
 
     @property
     def supports_opt_state_averaging(self) -> bool:
@@ -132,6 +161,26 @@ class Exchange:
                 state["pushed_opt"] = {
                     k: jax.tree.map(jnp.copy, v) for k, v in moments.items()}
             state["round"] = jnp.zeros((), jnp.int32)
+        if self.lossy_downlink:
+            # per-stream downlink memory (DESIGN.md §11): the last DECODED
+            # broadcast (every receiver holds it, so it is the delta
+            # reference the server encodes against) plus the downlink
+            # codec's own state — seeded/counted apart from the uplink.
+            # The reference must be SHARED across G: init to the G-mean
+            # (bit-equal to the params when they start replicated — the
+            # normal round init)
+            def dinit(v):
+                def shared(a):
+                    m = jnp.mean(a, axis=0, keepdims=True)
+                    return jnp.broadcast_to(m, a.shape) + 0.0
+
+                return {"ref": jax.tree.map(shared, v),
+                        "state": self.downlink_codec.init(v)}
+
+            state["down"] = {"params": dinit(params_G)}
+            if moments:
+                state["down"].update(
+                    {k: dinit(v) for k, v in moments.items()})
         return state
 
     # -- mixing -----------------------------------------------------------
@@ -183,6 +232,59 @@ class Exchange:
             y = jax.tree.map(lambda v: self._mix_leaf_once(v, w), y_hat)
         return y, cstate
 
+    def _fusable(self, codec, x) -> bool:
+        """Streams the fused codec-mix epilogue covers (DESIGN.md §11):
+        a flat (G, N) buffer through a width codec on a topology whose
+        mixing is pure mean / W-row arithmetic, or top-k on the server
+        topology (select + error-feedback residual + mean fuse once the
+        per-group threshold is known; ring/gossip re-select per hop and
+        keep the staged path). async keeps the staged path (the
+        staleness mask interleaves); pytree streams have no flat wire
+        format."""
+        if not (self.fused and isinstance(x, jax.Array) and x.ndim == 2):
+            return False
+        if codec.topk_frac > 0:
+            return self.topology == "server"
+        return (codec.name in ("int8", "fp16", "bf16")
+                and self.topology in ("server", "ring", "gossip"))
+
+    def _fused_stream(self, codec, x, x0, cstate):
+        """One stream through the fused epilogue: encode + decode + mix
+        (+ per-hop recompression / + EF residual for top-k) in one pass
+        — kernel or the staged-op jnp reference per ``codec.impl``.
+        Width codecs are bit-identical to the staged path; the top-k
+        thresh kind matches the staged exact selection except on exact
+        nonzero |c| ties at the threshold (it then ships the whole tie
+        group — absent in generic fp data). Noise is generated here at
+        the staged rows shape (the kernel is deterministic given its
+        inputs — kernels/quantize.py contract)."""
+        from repro.kernels import use_interpret
+        from repro.kernels import exchange_epilogue as ee
+
+        if codec.topk_frac > 0:          # server top-k (mean mixing)
+            res = cstate["residual"]
+            c = (x - x0) + res
+            k = max(1, int(round(codec.topk_frac * x.shape[-1])))
+            tau = jax.lax.top_k(jnp.abs(c), k)[0][:, -1:]
+            mixed, res_out = ee.codec_mix(x, x0, kind="thresh",
+                                          residual=res, tau=tau,
+                                          impl=codec.impl,
+                                          interpret=use_interpret())
+            return mixed, {"residual": res_out}
+        hops = self.mix_rounds if self.w is not None else 1
+        u, new_state = None, cstate
+        if codec.chunk > 0:
+            g, n = x.shape
+            rows_shape = (g * (-(-n // codec.chunk)), codec.chunk)
+            u = jnp.stack([codec.noise(cstate["count"] + h, rows_shape)
+                           for h in range(hops)])
+            new_state = {"count": cstate["count"] + hops}
+        mixed, _ = ee.codec_mix(x, x0, kind=codec.name, u=u, w=self.w,
+                                hops=hops, chunk=codec.chunk,
+                                impl=codec.impl,
+                                interpret=use_interpret())
+        return mixed, new_state
+
     def streams(self, xs: dict, xs0: dict, comm_state: dict):
         """One exchange of the round's MULTI-STREAM payload (DESIGN.md
         §10). ``xs`` maps stream name -> post-local-step value (leading
@@ -205,6 +307,14 @@ class Exchange:
                 # so a no-comm baseline must not inject quantization noise
                 x_hat[name] = x
                 continue
+            if self._fusable(codec, x):
+                y, cs = self._fused_stream(codec, x, xs0[name],
+                                           cstates.get(name, {}))
+                mixed[name] = y
+                if codec.stateful:
+                    cstates[name] = cs
+                    touched = True
+                continue
             if self.w is not None:
                 # decentralized + lossy: codec applied per mixing hop
                 y, cs = self._decentral_lossy(x, xs0[name],
@@ -224,7 +334,7 @@ class Exchange:
             new_state["codec"] = cstates
         if self.topology != "async_stale":
             mixed.update({k: self.mix(v) for k, v in x_hat.items()})
-            return mixed, new_state
+            return self._apply_downlink(mixed, comm_state, new_state)
         # bounded-staleness server: refresh only this round's pushers,
         # average everyone's last push — per stream (params + moments each
         # keep their own staleness buffer, refreshed by the same mask)
@@ -247,7 +357,33 @@ class Exchange:
                 mixed[k] = self.mix(pushed_opt[k])
             new_state["pushed_opt"] = pushed_opt
         new_state["round"] = rnd + 1
-        return mixed, new_state
+        return self._apply_downlink(mixed, comm_state, new_state)
+
+    def _apply_downlink(self, mixed: dict, comm_state: dict,
+                        new_state: dict):
+        """Model the compressed broadcast reply (DESIGN.md §11): what
+        groups actually receive is the server's mean re-encoded as a
+        delta vs the LAST decoded broadcast, per stream, through the
+        downlink codec. No downlink codec (the default) means the
+        idealized broadcast — bit-exact with the pre-§11 rounds."""
+        if not self.lossy_downlink:
+            return mixed, new_state
+        down = dict(comm_state["down"])
+        out = {}
+        for name, m in mixed.items():
+            st = down[name]
+            # ONE encode of the (row-identical) broadcast: every receiver
+            # decodes the same bits, so the delta is compressed on a
+            # single G-row and the decoded payload broadcast back
+            delta = jax.tree.map(lambda a, b: (a - b)[:1], m, st["ref"])
+            d_hat, cs = self.downlink_codec.compress(delta, st["state"])
+            m_hat = jax.tree.map(
+                lambda b, d: b + jnp.broadcast_to(d, b.shape),
+                st["ref"], d_hat)
+            out[name] = m_hat
+            down[name] = {"ref": m_hat, "state": cs}
+        new_state["down"] = down
+        return out, new_state
 
     def params(self, x_G, x0_G, comm_state: dict):
         """Single-stream convenience wrapper over ``streams``: one
@@ -287,14 +423,26 @@ class Exchange:
     def _stream_payload_bytes(self, n_params: int,
                               moment_sizes: Optional[Dict[str, int]]
                               ) -> Dict[str, int]:
-        """One payload, per stream: each stream's buffer through ITS codec
-        (params via ``codec``, moments via ``moment_codec`` — the fp32
-        moment surcharge this replaces was ``4 * moment_elems``). The
-        downlink rides at the same widths — the server re-encodes the new
-        mean as a delta against its last broadcast with the same codecs."""
+        """One UPLINK payload, per stream: each stream's buffer through
+        ITS codec (params via ``codec``, moments via ``moment_codec`` —
+        the fp32 moment surcharge this replaces was ``4 * moment_elems``)."""
         out = {"params": self.codec.wire_bytes(n_params)}
         for k, n in (moment_sizes or {}).items():
             out[k] = self.mcodec.wire_bytes(n)
+        return out
+
+    def _downlink_payload_bytes(self, n_params: int,
+                                moment_sizes: Optional[Dict[str, int]]
+                                ) -> Dict[str, int]:
+        """One DOWNLINK payload, per stream. Default (no downlink codec):
+        the server re-encodes the new mean as a delta against its last
+        broadcast at the SAME widths as the uplink. With a downlink
+        codec, every broadcast stream rides at ITS width (DESIGN.md §11)."""
+        if self.downlink_codec is None:
+            return self._stream_payload_bytes(n_params, moment_sizes)
+        out = {"params": self.downlink_codec.wire_bytes(n_params)}
+        for k, n in (moment_sizes or {}).items():
+            out[k] = self.downlink_codec.wire_bytes(n)
         return out
 
     def _legacy_sizes(self, moment_elems: int,
@@ -311,11 +459,13 @@ class Exchange:
         replies are distinct payloads, p2p edge payloads count once). The
         old totals are exactly the sums of these."""
         per = self._stream_payload_bytes(n_params, moment_sizes)
+        per_dn = self._downlink_payload_bytes(n_params, moment_sizes)
         s, r = self.senders_per_round(), self.receivers_per_round()
         out = {}
         for k, b in per.items():
             up = int(round(s * b))
-            out[k] = up if self.w is not None else up + int(round(r * b))
+            out[k] = up if self.w is not None \
+                else up + int(round(r * per_dn[k]))
         return out
 
     def wire_bytes_up(self, n_params: int, moment_elems: int = 0, *,
@@ -330,7 +480,7 @@ class Exchange:
         ms = self._legacy_sizes(moment_elems, moment_sizes)
         r = self.receivers_per_round()
         return sum(int(round(r * b)) for b in
-                   self._stream_payload_bytes(n_params, ms).values())
+                   self._downlink_payload_bytes(n_params, ms).values())
 
     def wire_bytes_per_round(self, n_params: int, moment_elems: int = 0, *,
                              moment_sizes: Optional[Dict[str, int]] = None
@@ -351,13 +501,32 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
                  n_groups: int = 1, *, mix_rounds: int = 1,
                  staleness: int = 1, seed: int = 0, impl: str = "auto",
                  chunk: int = 256, topk_frac: float = 0.05,
-                 moment_codec: str = "fp32") -> Exchange:
+                 moment_codec: str = "fp32", downlink_codec: str = "",
+                 fused: bool = True) -> Exchange:
     """Build an Exchange from names (the ``--comm`` / ``--codec`` /
-    ``--moment-codec`` flags). ``moment_codec`` applies to every moment
-    stream of the payload (DESIGN.md §10); topk is refused there."""
+    ``--moment-codec`` / ``--downlink-codec`` flags). ``moment_codec``
+    applies to every moment stream of the payload (DESIGN.md §10); topk
+    is refused there. ``downlink_codec`` ("" = default: the idealized
+    broadcast priced at uplink widths) compresses the server/async
+    broadcast reply independently of the uplink (DESIGN.md §11)."""
     if topology not in TOPOLOGIES:
         raise ValueError(f"unknown topology {topology!r} "
                          f"(have {TOPOLOGIES})")
+    if downlink_codec:
+        if topology in ("ring", "gossip"):
+            raise NotImplementedError(
+                "ring/gossip edge payloads are symmetric — each edge "
+                "transmission IS both one node's uplink and its "
+                "neighbor's downlink, so there is no separate downlink "
+                "to compress (DESIGN.md §11)")
+        if topology == "none":
+            raise NotImplementedError(
+                "the 'none' topology has no wire; a downlink codec "
+                "would compress a broadcast that never happens")
+        if downlink_codec == "topk":
+            raise NotImplementedError(
+                "topk is not supported as a downlink codec (DESIGN.md "
+                "§11): use fp16/bf16/int8 for the broadcast reply")
     if topology == "async_stale" and codec == "topk":
         # the staleness schedule DROPS non-pushing groups' deltas by
         # design; an error-feedback residual would instead absorb their
@@ -382,13 +551,18 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
     mc = (_FP32 if moment_codec == "fp32" else
           codecs_mod.get_codec(moment_codec, impl=impl, chunk=chunk,
                                topk_frac=topk_frac, seed=seed + 1))
+    # the downlink codec gets its own seed lane too (its rounding bits
+    # must not correlate with either uplink stream's)
+    dc = (codecs_mod.get_codec(downlink_codec, impl=impl, chunk=chunk,
+                               topk_frac=topk_frac, seed=seed + 2)
+          if downlink_codec else None)
     w = None
     if topology in ("ring", "gossip"):
         w = topo_mod.mixing_matrix(topology, n_groups, seed=seed)
     return Exchange(topology=topology, codec=c, n_groups=n_groups,
                     mix_rounds=mix_rounds,
                     staleness=staleness if topology == "async_stale" else 0,
-                    w=w, moment_codec=mc)
+                    w=w, moment_codec=mc, downlink_codec=dc, fused=fused)
 
 
 def default_exchange(n_groups: int) -> Exchange:

@@ -101,3 +101,33 @@ def n_edge_sends(w: np.ndarray) -> int:
     off = w.copy()
     np.fill_diagonal(off, 0.0)
     return int(np.count_nonzero(off))
+
+
+def neighbor_offsets(w: np.ndarray) -> tuple:
+    """Distinct nonzero circulant offsets of W's off-diagonal support:
+    ``d`` is in the result iff some node i receives from ``(i + d) % m``.
+
+    The ppermute hop (sharding/shardexec) ships one neighbor exchange per
+    offset instead of an all_gather of all G blocks — O(deg·shard) wire
+    for a ring (whose support is exactly {1, m-1}) instead of O(G·shard).
+    Irregular graphs (gossip chords) ship the union of offsets; entries a
+    node has no edge for carry weight 0 (see ``offset_weights``) and a
+    real per-link transport would elide them — the wire accounting counts
+    only the true nonzero edges (``n_edge_sends``)."""
+    m = w.shape[0]
+    off = w.copy()
+    np.fill_diagonal(off, 0.0)
+    i, j = np.nonzero(off)
+    return tuple(sorted({int(d) for d in (j - i) % m}))
+
+
+def offset_weights(w: np.ndarray, offsets: tuple) -> np.ndarray:
+    """(n_offsets, m) offset-decomposed view of W's off-diagonal: entry
+    [d_idx, g] is ``W[g, (g + d) % m]`` — node g's weight on the payload
+    arriving at offset d (0 where g has no such edge). A verification
+    helper (tests reconstruct W's support from it); the ppermute hop
+    itself takes this group's full W row via ``jnp.take`` after
+    assembling the received blocks (``ShardExec._hop_fn``)."""
+    m = w.shape[0]
+    g = np.arange(m)
+    return np.stack([w[g, (g + d) % m] for d in offsets]).astype(np.float32)

@@ -94,6 +94,12 @@ def _resolve_exchange(exchange, cfg: LocalSGDConfig, layout):
             f"moment codec {exch.mcodec.name!r} needs packed flat moment "
             "buffers as its wire format — run the round with a "
             "packing.Layout and a packed optimizer (DESIGN.md §10)")
+    if (exch.downlink_codec is not None and exch.downlink_codec.flat_only
+            and layout is None and exch.topology != "none"):
+        raise NotImplementedError(
+            f"downlink codec {exch.downlink_codec.name!r} needs the "
+            "packed flat buffer as its wire format — run the round with "
+            "a packing.Layout (DESIGN.md §11)")
     if cfg.average_opt_state and not exch.supports_opt_state_averaging:
         raise NotImplementedError(
             f"{exch.topology} cannot average opt state; set "
@@ -149,7 +155,8 @@ def _clamp_nonneg_streams(mixed: dict, opt, exch) -> dict:
     slightly negative and sqrt(v) would NaN. The true value is >= 0, so
     the projection only shrinks the decode error. Identity moment codecs
     skip this entirely (the default path stays bit-exact)."""
-    if exch.mcodec.identity or exch.topology == "none":
+    if (exch.mcodec.identity and not exch.lossy_downlink) \
+            or exch.topology == "none":
         return mixed
     nonneg = getattr(opt, "moment_nonneg", ())
     return {k: (jax.tree.map(lambda x: jnp.maximum(x, 0.0), v)
@@ -363,6 +370,7 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
     this path (use the pytree path): threshold (T_i = inf) mode.
     """
     assert cfg.metrics in ("traj", "final"), cfg.metrics
+    packing.check_packed_index_space(layout, cfg.n_groups)
     if cfg.threshold is not None:
         raise NotImplementedError(
             "threshold (T_i=inf) mode runs on the pytree path")
@@ -532,6 +540,7 @@ def make_sync_step(loss_fn: Callable, opt: Optimizer,
             raise ValueError(
                 "packed sync steps need BOTH a packing.Layout and a "
                 "packed optimizer")
+        packing.check_packed_index_space(layout)
         use_pallas = getattr(opt, "impl", "jnp") == "pallas"
         flat_vg = packing.value_and_flat_grad(loss_fn, layout)
 

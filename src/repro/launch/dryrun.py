@@ -71,7 +71,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             packed: bool = False, comm: str = "server",
             codec: str = "fp32", mix_rounds: int = 1,
             staleness: int = 1, impl: str = "auto",
-            moment_codec: str = "fp32") -> dict:
+            moment_codec: str = "fp32", downlink_codec: str = "") -> dict:
     import dataclasses as _dc
 
     import jax
@@ -94,7 +94,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
               "policy": policy, "schedule": schedule, "packed": packed,
               "comm": comm, "codec": codec, "mix_rounds": mix_rounds,
               "staleness": staleness, "impl": impl,
-              "moment_codec": moment_codec}
+              "moment_codec": moment_codec,
+              "downlink_codec": downlink_codec}
         if moe_impl:
             kw["moe_impl"] = moe_impl
     elif shape.kind == "prefill":
@@ -246,6 +247,11 @@ def main() -> None:
                     help="wire codec for the optimizer moment streams "
                          "(DESIGN.md §10); meta reports per-stream "
                          "wire_bytes_per_round_by_stream")
+    ap.add_argument("--downlink-codec", default="",
+                    choices=["", "fp32", "fp16", "bf16", "int8"],
+                    help="compress the server/async broadcast reply "
+                         "independently of the uplink (DESIGN.md §11); "
+                         "wire_bytes_down_per_round prices it")
     ap.add_argument("--mix-rounds", type=int, default=1,
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
@@ -280,6 +286,8 @@ def main() -> None:
             extra += ["--codec", args.codec]
         if args.moment_codec != "fp32":
             extra += ["--moment-codec", args.moment_codec]
+        if args.downlink_codec:
+            extra += ["--downlink-codec", args.downlink_codec]
         if args.mix_rounds != 1:
             extra += ["--mix-rounds", str(args.mix_rounds)]
         if args.staleness != 1:
@@ -299,7 +307,8 @@ def main() -> None:
                       schedule=args.schedule, embed_impl=args.embed_impl,
                       packed=args.packed, comm=args.comm, codec=args.codec,
                       mix_rounds=args.mix_rounds, staleness=args.staleness,
-                      impl=args.impl, moment_codec=args.moment_codec)
+                      impl=args.impl, moment_codec=args.moment_codec,
+                      downlink_codec=args.downlink_codec)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

@@ -143,8 +143,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      policy: str = "tp", packed: bool = False,
                      comm: str = "server", codec: str = "fp32",
                      mix_rounds: int = 1, staleness: int = 1,
-                     impl: str = "auto",
-                     moment_codec: str = "fp32") -> BuiltStep:
+                     impl: str = "auto", moment_codec: str = "fp32",
+                     downlink_codec: str = "") -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
     on an fsdp mesh (params additionally sharded over "fsdp").
@@ -168,7 +168,7 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     sharded or single-device packed paths only), "jnp" (one XLA fusion),
     "auto" (pallas where supported, else jnp)."""
     if mode == "sync" and (comm != "server" or codec != "fp32"
-                           or moment_codec != "fp32"):
+                           or moment_codec != "fp32" or downlink_codec):
         raise ValueError(
             "comm/codec select the local-SGD model exchange; sync-DP "
             "all-reduces gradients every step and has no exchange — "
@@ -206,7 +206,7 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         return _build_packed_train_step(cfg, shape, mesh, model, opt_name,
                                         lr, mode, t_inner, comm, codec,
                                         mix_rounds, staleness, impl,
-                                        moment_codec)
+                                        moment_codec, downlink_codec)
     if impl != "auto":
         # same no-silent-fallback rule as optim.get: the pytree round has
         # no fused-kernel path for impl to select
@@ -240,7 +240,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     b = shape.global_batch // G
     exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
                                         staleness,
-                                        moment_codec=moment_codec)
+                                        moment_codec=moment_codec,
+                                        downlink_codec=downlink_codec)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -321,7 +322,8 @@ def _packed_impl(impl: str, mesh: Mesh, sexec) -> str:
 
 def _build_exchange(comm: str, codec: str, n_groups: int,
                     mix_rounds: int = 1, staleness: int = 1,
-                    impl: str = "jnp", moment_codec: str = "fp32"):
+                    impl: str = "jnp", moment_codec: str = "fp32",
+                    downlink_codec: str = ""):
     """Exchange for a mesh step builder; ``impl`` selects the codec
     kernels and must already be resolved for the execution path
     (``_packed_impl`` — shard_map runs the Pallas quantize kernels on
@@ -332,7 +334,8 @@ def _build_exchange(comm: str, codec: str, n_groups: int,
     exchange = comm_mod.get_exchange(comm, codec, n_groups, impl=impl,
                                      mix_rounds=mix_rounds,
                                      staleness=staleness,
-                                     moment_codec=moment_codec)
+                                     moment_codec=moment_codec,
+                                     downlink_codec=downlink_codec)
     return exchange, exchange.supports_opt_state_averaging
 
 
@@ -361,6 +364,23 @@ def _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
             return param_specs
         if k == "pushed_opt":
             return {name: param_specs for name in v}
+        if k == "codec":
+            # per-stream codec state: error-feedback residuals mirror the
+            # stream's geometry and must shard like the params (the
+            # shard_map exchange declares them at buf_spec — a lead-only
+            # spec would reshard the O(Np) residual every round);
+            # counters keep the generic rule
+            return {name: {kk: (param_specs if kk == "residual"
+                                else jax.tree.map(spec, vv))
+                           for kk, vv in sub.items()}
+                    for name, sub in v.items()}
+        if k == "down":
+            # each stream's broadcast reference mirrors the params'
+            # geometry (DESIGN.md §11) — same rule as the staleness
+            # buffers; the codec state (counters) follows the generic rule
+            return {name: {"ref": param_specs,
+                           "state": jax.tree.map(spec, sub["state"])}
+                    for name, sub in v.items()}
         return jax.tree.map(spec, v)
 
     cspecs = {k: for_key(k, v) for k, v in comm_abs.items()}
@@ -374,7 +394,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                              codec: str = "fp32", mix_rounds: int = 1,
                              staleness: int = 1,
                              impl: str = "auto",
-                             moment_codec: str = "fp32") -> BuiltStep:
+                             moment_codec: str = "fp32",
+                             downlink_codec: str = "") -> BuiltStep:
     """Flat-buffer train step (DESIGN.md §6/§9): one (G, Np) f32 buffer
     per state part, donated so XLA updates the model in place across the
     T-step round. When the mesh has an in-group axis ("model"/"fsdp" > 1)
@@ -415,7 +436,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     b = shape.global_batch // G
     exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
                                         staleness, impl=impl,
-                                        moment_codec=moment_codec)
+                                        moment_codec=moment_codec,
+                                        downlink_codec=downlink_codec)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)

@@ -90,6 +90,17 @@ def main() -> None:
                     help="wire codec for the optimizer moment streams "
                          "(DESIGN.md §10); int8 needs --packed, topk is "
                          "refused for moments")
+    ap.add_argument("--downlink-codec", default="",
+                    choices=["", "fp32", "fp16", "bf16", "int8"],
+                    help="compress the server/async broadcast reply "
+                         "independently of the uplink codec (DESIGN.md "
+                         "§11); default: idealized broadcast priced at "
+                         "uplink widths (the pre-§11 behavior, bit-exact)")
+    ap.add_argument("--hop-impl", default="ppermute",
+                    choices=["ppermute", "allgather"],
+                    help="sharded ring/gossip hop collective (DESIGN.md "
+                         "§11): ppermute neighbor exchange (O(deg*shard) "
+                         "wire) or the dense all_gather reference")
     ap.add_argument("--mix-rounds", type=int, default=1,
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
@@ -101,7 +112,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.mode == "sync" and (args.comm != "server"
                                 or args.codec != "fp32"
-                                or args.moment_codec != "fp32"):
+                                or args.moment_codec != "fp32"
+                                or args.downlink_codec):
         ap.error("--comm/--codec select the local-SGD model exchange; "
                  "sync-DP all-reduces gradients every step and has no "
                  "exchange to configure")
@@ -135,7 +147,7 @@ def main() -> None:
                 f"--xla_force_host_platform_device_count={n_dev}")
         mesh = Mesh(np.array(devices[:n_dev]).reshape(G, args.shard),
                     ("data", "model"))
-        sexec = shx.plan_for(mesh, require=True)
+        sexec = shx.plan_for(mesh, require=True, hop_impl=args.hop_impl)
         layout = packing.shard_layout(layout, sexec.n_shards)
         print(f"sharded execution: G={G} x {args.shard} shards, "
               f"buffer {layout.size} -> {layout.padded} padded "
@@ -175,7 +187,8 @@ def main() -> None:
             args.comm, args.codec, G, mix_rounds=args.mix_rounds,
             staleness=args.staleness,
             impl=args.impl if args.packed else "auto",
-            moment_codec=args.moment_codec)
+            moment_codec=args.moment_codec,
+            downlink_codec=args.downlink_codec)
         # every topology averages opt state now that the per-stream
         # staleness buffers exist (DESIGN.md §10)
         avg_opt = exchange.supports_opt_state_averaging

@@ -151,6 +151,27 @@ def stream_layout_for(opt, layout: Layout) -> StreamLayout:
     return StreamLayout(layout, ("params",) + tuple(opt.moment_keys))
 
 
+# XLA's packed-round lowering addresses the (G, Np) state buffers with
+# int32 linear indices; a buffer past this limit dies mid-lower with a
+# bare "Python int ... too large to convert to int32" (the billion-param
+# dryrun overflow noted in PR 3) — refuse up front with the limit stated
+INT32_INDEX_MAX = 2**31 - 1
+
+
+def check_packed_index_space(layout: Layout, n_groups: int = 1) -> None:
+    """Refuse packed layouts whose (n_groups, padded) state buffers
+    overflow XLA's int32 index space (see INT32_INDEX_MAX)."""
+    total = n_groups * layout.padded
+    if total > INT32_INDEX_MAX:
+        raise NotImplementedError(
+            f"packed state buffer ({n_groups} group(s) x {layout.padded:,}"
+            f" f32 elements = {total:,}) exceeds the int32 index space "
+            f"(2**31-1 = {INT32_INDEX_MAX:,}) XLA's packed-round lowering "
+            "uses — lowering would die with an int32 OverflowError. Run "
+            "billion-param configs on the per-leaf pytree path (each leaf "
+            "stays under the limit), or reduce the model / group count.")
+
+
 def layout_of(tree) -> Layout:
     """Build the static layout from a pytree of arrays/ShapeDtypeStructs."""
     leaves, treedef = jax.tree.flatten(tree)

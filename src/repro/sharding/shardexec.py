@@ -21,19 +21,31 @@ Mapping (one ``ShardExec`` per mesh):
   zero collectives;
 * the group exchange routes through ``comm.Exchange`` semantics expressed
   with collectives: server/async mean = ``psum`` over the group axes,
-  ring/gossip = per-hop ``all_gather`` + this group's row of the mixing
-  matrix (with per-hop recompression, matching the replicated path);
+  ring/gossip = per-hop NEIGHBOR exchange — one ``ppermute`` per nonzero
+  circulant offset of W ships O(deg·shard) wire per hop instead of the
+  old all_gather's O(G·shard) (DESIGN.md §11; ``hop_impl="allgather"``
+  keeps the dense hop as the bit-exact parity reference) — with per-hop
+  recompression matching the replicated path;
+* ``topk`` runs SHARDED (DESIGN.md §11): distributed selection — shard-
+  local top-k bounds + a psum'd bisection refine the per-group threshold
+  over the shard axes; entries with ``|c| >= tau`` (and never the zero
+  pad) ship, at most k per group; the error-feedback residual is shard-
+  local and everything unselected is re-offered next round;
 * metric ``||g||²`` = shard-local ``sq_norm`` + ``psum`` over shard axes.
 
-Parity contract (tests/test_shardexec.py): sharded packed rounds match the
-replicated path on the SAME ``ShardedLayout`` to fp32 tolerance for
-sgd/momentum/adamw × server/ring × fp32/int8 — int8 exactly, because the
-stochastic-rounding noise is generated OUTSIDE the shard_map block at the
-full rows shape (``Codec.noise``) and each device consumes its own slice.
+Parity contract (tests/test_shardexec.py + test_exchange_engine.py):
+sharded packed rounds match the replicated path on the SAME
+``ShardedLayout`` to fp32 tolerance for sgd/momentum/adamw × server/ring
+× fp32/int8 — int8 exactly, because the stochastic-rounding noise is
+generated OUTSIDE the shard_map block at the full rows shape
+(``Codec.noise``) and each device consumes its own slice; the ppermute
+hop is bit-exact vs the all_gather hop (same assembled (G, shard) rows,
+same W-row contraction). Sharded top-k is NOT bit-matched to the
+replicated exact selection (threshold rule, §11) — it is convergence-
+matched (fig2 suite) and property-tested instead.
 
-Refused here (use the replicated path): ``topk`` (global per-group
-selection + a residual that error feedback must update consistently —
-shard-local top-k would change the payload).
+Refused here (use the replicated path): a ``downlink_codec`` (its
+broadcast-reference state is not threaded through the shard_map block).
 """
 from __future__ import annotations
 
@@ -45,11 +57,18 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.comm import topology as topo_mod
 from repro.optim import packing
 
 # in-group axes a packed buffer may shard over, major-to-minor — must stay
 # consistent everywhere a buffer spec is built
 SHARD_AXES = ("fsdp", "model")
+
+# psum'd bisection steps refining the sharded top-k threshold: each step
+# halves the [lo, hi] bracket, so 26 resolves ~1e-8 of the value range —
+# below that the unselected near-threshold mass just waits one round in
+# the error-feedback residual (DESIGN.md §11)
+TOPK_BISECT_ITERS = 26
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +77,11 @@ class ShardExec:
     mesh: Mesh
     group_axes: Tuple[str, ...]    # the local-SGD G axis (pod/data)
     shard_axes: Tuple[str, ...]    # in-group buffer axes (fsdp/model)
+    # ring/gossip hop collective: "ppermute" (neighbor exchange, the
+    # bandwidth-optimal default — O(deg·shard) wire) or "allgather" (the
+    # dense O(G·shard) hop, kept as the bit-exact parity/benchmark
+    # reference — DESIGN.md §11)
+    hop_impl: str = "ppermute"
 
     @property
     def n_shards(self) -> int:
@@ -153,7 +177,7 @@ class ShardExec:
 
     def mix(self, exch):
         """Sharded ``Exchange.mix`` for ONE (G, Np) buffer: psum-mean for
-        server/async, k hops of all_gather + this group's W row for
+        server/async, k neighbor-exchange hops + this group's W row for
         ring/gossip. Identity-codec streams ride these same ops inside
         ``exchange_streams`` (DESIGN.md §10); kept as the standalone
         codec-free utility (and the §10 bit-exactness reference)."""
@@ -161,36 +185,115 @@ class ShardExec:
             return lambda x: x
         spec = self.buf_spec()
         gax = self._entry(self.group_axes)
-        w = None if exch.w is None else jnp.asarray(exch.w, jnp.float32)
+        hop = self._hop_fn(exch.w, gax)
 
         def local(x):
-            if w is None:
+            if hop is None:
                 return jax.lax.pmean(x, gax)
             y = x
             for _ in range(exch.mix_rounds):
-                y = self._mix_hop(y, w, gax)
+                y = hop(y)
             return y
 
         return shard_map(local, mesh=self.mesh, in_specs=(spec,),
                          out_specs=spec, check_rep=False)
 
-    def _mix_hop(self, y, w, gax):
-        """One W hop on a local (1, shard) block: gather the G neighbor
-        blocks for THIS shard range, weight by this group's W row."""
-        full = jax.lax.all_gather(y, gax, axis=0, tiled=True)   # (G, shard)
-        row = jnp.take(w, self._gidx(), axis=0)                 # (G,)
-        return jnp.tensordot(row, full, axes=[[0], [0]])[None]
+    def _hop_fn(self, w_np, gax):
+        """Build the one-W-hop closure for a local (1, shard) block, or
+        None for mean topologies (no W).
+
+        ``hop_impl="ppermute"`` (default): one ``ppermute`` per distinct
+        nonzero circulant offset of W ships each neighbor block point-to-
+        point — O(deg·shard) wire per hop for a ring (offsets exactly
+        {1, G-1}); irregular gossip graphs ship the offset UNION, with
+        zero-weight slots a real per-link transport would elide (the
+        byte accounting counts only true edges — ``n_edge_sends``). The
+        received blocks are assembled into the same (G, shard) rows the
+        all_gather produced (absent neighbors stay zero) and contracted
+        with this group's W row — 0-weight × 0-value terms make the
+        result BIT-EXACT vs the all_gather hop.
+
+        ``hop_impl="allgather"``: the dense O(G·shard) hop (parity and
+        benchmark reference)."""
+        if w_np is None:
+            return None
+        w = jnp.asarray(w_np, jnp.float32)
+        G = self.n_groups
+
+        if self.hop_impl == "allgather":
+            def hop(y):
+                full = jax.lax.all_gather(y, gax, axis=0, tiled=True)
+                row = jnp.take(w, self._gidx(), axis=0)         # (G,)
+                return jnp.tensordot(row, full, axes=[[0], [0]])[None]
+
+            return hop
+        if self.hop_impl != "ppermute":
+            raise ValueError(f"unknown hop_impl {self.hop_impl!r} "
+                             "(have 'ppermute', 'allgather')")
+        offs = topo_mod.neighbor_offsets(w_np)
+
+        def hop(y):
+            gidx = self._gidx()
+            full = jnp.zeros((G,) + y.shape[1:], y.dtype)
+            full = jax.lax.dynamic_update_slice(full, y, (gidx, 0))
+            for d in offs:
+                # dest g receives the block of group (g + d) % G; the
+                # flattened multi-axis order matches _gidx (major->minor)
+                perm = [(src, (src - d) % G) for src in range(G)]
+                recv = jax.lax.ppermute(y, gax, perm)
+                full = jax.lax.dynamic_update_slice(
+                    full, recv, ((gidx + d) % G, 0))
+            row = jnp.take(w, gidx, axis=0)                     # (G,)
+            return jnp.tensordot(row, full, axes=[[0], [0]])[None]
+
+        return hop
+
+    # -- sharded top-k selection (DESIGN.md §11) --------------------------
+
+    def _topk_threshold(self, a, k: int, sax, shard_size: int):
+        """Per-group selection threshold for the sharded top-k codec:
+        shard-local top-k bounds the global k-th value (the shard whose
+        local k-th is largest proves count(>= lo) >= k; hi = global
+        amax), then ``TOPK_BISECT_ITERS`` psum'd bisection steps shrink
+        the bracket. Returns ``hi`` — the conservative end, so at most k
+        entries are selected (near-threshold mass defers one round into
+        the error-feedback residual). ``a``: shard-local |c| (shard,)."""
+        k_loc = min(k, shard_size)
+        top = jax.lax.top_k(a, k_loc)[0]
+        hi0 = jax.lax.pmax(top[0], sax)
+        lo0 = (jax.lax.pmax(top[-1], sax) if k <= shard_size
+               else jnp.zeros((), a.dtype))
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            cnt = jax.lax.psum(jnp.sum((a >= mid).astype(jnp.int32)), sax)
+            big = cnt > k
+            return jnp.where(big, mid, lo), jnp.where(big, hi, mid)
+
+        _, hi = jax.lax.fori_loop(0, TOPK_BISECT_ITERS, body, (lo0, hi0))
+        return hi
+
+    @staticmethod
+    def _topk_select(c, tau):
+        """Threshold selection with exact error feedback on the local
+        block: ship ``|c| >= tau`` (never zeros — the pad region and
+        dead coordinates stay off the wire), carry the rest. The EF
+        identity ``c == d_hat + residual`` holds exactly."""
+        keep = (jnp.abs(c) >= tau) & (jnp.abs(c) > 0.0)
+        d_hat = jnp.where(keep, c, 0.0)
+        return d_hat, c - d_hat
 
     # -- the communication step -------------------------------------------
 
     def exchange_streams(self, exch, layout: packing.Layout):
-        """shard_map'd ``Exchange.streams`` (DESIGN.md §10): every stream
-        of the round's payload — params plus averaged moment buffers —
-        goes through ITS codec and the topology inside ONE shard_map
-        block, semantics-matched to the replicated path (incl. per-hop
-        recompression for decentralized lossy rounds, per-stream codec
-        state, and per-stream async staleness buffers). Codec handling on
-        the local shard:
+        """shard_map'd ``Exchange.streams`` (DESIGN.md §10/§11): every
+        stream of the round's payload — params plus averaged moment
+        buffers — goes through ITS codec and the topology inside ONE
+        shard_map block, semantics-matched to the replicated path (incl.
+        per-hop recompression for decentralized lossy rounds, per-stream
+        codec state, and per-stream async staleness buffers). Codec
+        handling on the local shard:
 
         * fp32 / topology "none": no codec work (bit-exact semantics),
         * fp16/bf16: element-wise cast on the local block (identical
@@ -198,8 +301,13 @@ class ShardExec:
         * int8: noise generated OUTSIDE at the full rows shape via
           ``Codec.noise``, per stream from that stream's rng counter —
           per-chunk scales and rounding bits match the replicated path
-          bit-for-bit on every shard,
-        * topk: refused (global per-group selection; see module doc).
+          bit-for-bit on every shard (the pallas impl runs the fused
+          qdq kernel — one VMEM pass, DESIGN.md §11),
+        * topk: DISTRIBUTED selection (§11) — per-group threshold from
+          shard-local top-k + psum'd bisection, shard-local error-
+          feedback residual under ``comm_state["codec"][stream]``; at
+          most k entries ship (threshold rule, not the replicated exact
+          selection — convergence-matched, see module doc).
 
         Returns ``fn(xs, xs0, comm_state) -> (mixed, new_comm_state)``
         over ``{stream: (G, Np) buffer}`` dicts.
@@ -207,10 +315,18 @@ class ShardExec:
         for c in (exch.codec, exch.mcodec):
             if not (c.shardable or c.identity):
                 raise NotImplementedError(
-                    f"codec {c.name!r} is not shardable: its payload is a "
-                    "global per-group selection with an error-feedback "
-                    "residual — run it on the replicated path "
-                    "(DESIGN.md §9)")
+                    f"codec {c.name!r} is not shardable — run it on the "
+                    "replicated path (DESIGN.md §9)")
+        if exch.downlink_codec is not None:
+            raise NotImplementedError(
+                "downlink_codec is replicated-path only: its broadcast-"
+                "reference state is not threaded through the shard_map "
+                "exchange (DESIGN.md §11)")
+        if exch.topology == "async_stale" and exch.codec.topk_frac > 0:
+            raise NotImplementedError(
+                "async_stale + topk: the staleness schedule drops "
+                "non-pushing rounds, error feedback assumes delivery "
+                "(DESIGN.md §8)")
         for c in (exch.codec, exch.mcodec):
             if (not c.identity) and c.chunk > 0:
                 self.check_layout(layout, c.chunk)
@@ -219,8 +335,9 @@ class ShardExec:
         spec = self.buf_spec()
         gax = self._entry(self.group_axes)
         sax = self._entry(self.shard_axes)
-        w = None if exch.w is None else jnp.asarray(exch.w, jnp.float32)
+        hop = self._hop_fn(exch.w, gax)
         G = self.n_groups
+        shard_size = layout.shard_size
         dummy_spec = P(None, None)
 
         def is_lossy(codec):
@@ -240,30 +357,55 @@ class ShardExec:
             codecs = {k: exch.stream_codec(k) for k in names}
             lossy = {k: is_lossy(codecs[k]) for k in names}
             chunked = {k: lossy[k] and codecs[k].chunk > 0 for k in names}
-            n_compress = {k: (hops if (lossy[k] and w is not None)
+            selective = {k: lossy[k] and codecs[k].topk_frac > 0
+                         for k in names}
+            k_sel = {k: max(1, int(round(codecs[k].topk_frac
+                                         * layout.padded)))
+                     for k in names if selective[k]}
+            n_compress = {k: (hops if (lossy[k] and exch.w is not None)
                               else (1 if lossy[k] else 0)) for k in names}
             new_state = dict(comm_state)
             cstates = dict(comm_state.get("codec", {}))
 
-            def local(xs_t, x0s_t, us_t, pushed_t, rnd):
-                outs, new_pushed = [], []
+            def topk_step(name, y, ref, res):
+                """One selective-codec application on the local block:
+                distributed threshold + EF residual (DESIGN.md §11)."""
+                c = (y - ref) + res
+                tau = self._topk_threshold(jnp.abs(c)[0], k_sel[name],
+                                           sax, shard_size)
+                d_hat, res = self._topk_select(c, tau)
+                return ref + d_hat, res
+
+            def local(xs_t, x0s_t, us_t, res_t, pushed_t, rnd):
+                outs, new_res, new_pushed = [], [], []
                 for i, k in enumerate(names):
                     codec, x, x0 = codecs[k], xs_t[i], x0s_t[i]
-                    if w is not None:              # ring / gossip
+                    res = res_t[i]
+                    if exch.w is not None:         # ring / gossip
                         y, ref = x, x0
                         for h in range(hops):
-                            if lossy[k]:
+                            if selective[k]:
+                                y, res = topk_step(k, y, ref, res)
+                                ref = y
+                            elif lossy[k]:
                                 y = compress_local(
                                     codec, y, ref,
                                     us_t[i][h] if chunked[k] else None)
                                 ref = y
-                            y = self._mix_hop(y, w, gax)
+                            y = hop(y)
                         outs.append(y)
+                        new_res.append(res)
                         new_pushed.append(pushed_t[i])
                         continue
-                    y = compress_local(codec, x, x0,
-                                       us_t[i][0] if chunked[k] else None) \
-                        if lossy[k] else x
+                    if selective[k]:
+                        y, res = topk_step(k, x, x0, res)
+                    elif lossy[k]:
+                        y = compress_local(codec, x, x0,
+                                           us_t[i][0] if chunked[k]
+                                           else None)
+                    else:
+                        y = x
+                    new_res.append(res)
                     if exch.topology == "async_stale":
                         keep = ((self._gidx() + rnd)
                                 % (exch.staleness + 1)) == 0
@@ -276,7 +418,7 @@ class ShardExec:
                     else:                          # server
                         outs.append(jax.lax.pmean(y, gax))
                         new_pushed.append(pushed_t[i])
-                return tuple(outs), tuple(new_pushed)
+                return tuple(outs), tuple(new_res), tuple(new_pushed)
 
             dummy = jnp.zeros((1, 1), jnp.float32)
             us, us_specs = [], []
@@ -293,8 +435,16 @@ class ShardExec:
                                      for h in range(n_compress[k])]))
                 us_specs.append(P(None, gax, sax, None))
                 cstates[k] = {"count": cnt + n_compress[k]}
-            if any(chunked.values()):
-                new_state["codec"] = cstates
+            res, res_specs = [], []
+            for k in names:
+                if not selective[k]:
+                    res.append(dummy)
+                    res_specs.append(dummy_spec)
+                    continue
+                # the EF residual is element-wise state: it shards like
+                # the stream it carries (DESIGN.md §11)
+                res.append(comm_state["codec"][k]["residual"])
+                res_specs.append(spec)
             stale = exch.topology == "async_stale"
             pushed, pushed_specs = [], []
             for k in names:
@@ -311,14 +461,21 @@ class ShardExec:
             f = shard_map(local, mesh=self.mesh,
                           in_specs=((spec,) * len(names),
                                     (spec,) * len(names),
-                                    tuple(us_specs), tuple(pushed_specs),
-                                    P()),
+                                    tuple(us_specs), tuple(res_specs),
+                                    tuple(pushed_specs), P()),
                           out_specs=((spec,) * len(names),
+                                     tuple(res_specs),
                                      tuple(pushed_specs)),
                           check_rep=False)
-            mixed_t, new_pushed = f(tuple(xs[k] for k in names), x0s,
-                                    tuple(us), tuple(pushed), rnd)
+            mixed_t, new_res, new_pushed = f(
+                tuple(xs[k] for k in names), x0s, tuple(us), tuple(res),
+                tuple(pushed), rnd)
             mixed = dict(zip(names, mixed_t))
+            for i, k in enumerate(names):
+                if selective[k]:
+                    cstates[k] = {"residual": new_res[i]}
+            if any(chunked.values()) or any(selective.values()):
+                new_state["codec"] = cstates
             if stale:
                 new_state["pushed"] = new_pushed[names.index("params")]
                 mnames = [k for k in names if k != "params"]
@@ -346,10 +503,12 @@ class ShardExec:
         return one
 
 
-def plan_for(mesh: Mesh, require: bool = False) -> Optional[ShardExec]:
+def plan_for(mesh: Mesh, require: bool = False,
+             hop_impl: str = "ppermute") -> Optional[ShardExec]:
     """The mesh's sharded-execution plan, or None when no in-group axis
     has more than one device (the replicated path is then both correct
-    and free — nothing to shard over)."""
+    and free — nothing to shard over). ``hop_impl`` selects the
+    ring/gossip hop collective (DESIGN.md §11)."""
     shard_axes = tuple(a for a in SHARD_AXES
                        if a in mesh.axis_names and mesh.shape[a] > 1)
     if not shard_axes:
@@ -361,4 +520,4 @@ def plan_for(mesh: Mesh, require: bool = False) -> Optional[ShardExec]:
         return None
     group_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     return ShardExec(mesh=mesh, group_axes=group_axes,
-                     shard_axes=shard_axes)
+                     shard_axes=shard_axes, hop_impl=hop_impl)

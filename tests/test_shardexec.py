@@ -129,9 +129,12 @@ def test_plan_and_layout_guards(key):
         fake.check_layout(bad, chunk=256)
 
 
-def test_topk_refused_on_sharded_path(key):
-    """topk's payload is a global per-group selection with an
-    error-feedback residual — shard-local top-k would change it."""
+def test_sharded_path_refusals(key):
+    """The combos that stay replicated-only: a downlink codec (its
+    broadcast-reference state is not threaded through shard_map) and
+    async+topk (mirrors the replicated refusal). topk itself is NO
+    LONGER refused — it runs sharded via the distributed threshold
+    selection (DESIGN.md §11, tests/test_exchange_engine.py)."""
     params, _ = make_problem(key)
     from jax.sharding import Mesh
     m1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
@@ -140,8 +143,19 @@ def test_topk_refused_on_sharded_path(key):
                          shard_axes=("model",))
     layout = packing.shard_layout(packing.layout_of(params), 1)
     ex = comm.get_exchange("server", "topk", G)
+    fake.exchange(ex, layout)   # builds — topk shards now
+    ex_d = comm.get_exchange("server", "fp32", G, downlink_codec="bf16")
     with pytest.raises(NotImplementedError):
-        fake.exchange(ex, layout)
+        fake.exchange(ex_d, layout)
+    import dataclasses as _dc
+    ex_async = _dc.replace(comm.get_exchange("async_stale", "fp32", G,
+                                             staleness=1),
+                           codec=comm.get_codec("topk"))
+    with pytest.raises(NotImplementedError):
+        fake.exchange(ex_async, layout)
+    with pytest.raises(ValueError):
+        _dc.replace(fake, hop_impl="bogus")._hop_fn(
+            np.eye(G, dtype=np.float32), "data")
 
 
 def test_shardexec_needs_packed_path(key):
