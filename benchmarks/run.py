@@ -20,9 +20,10 @@ sys.path.insert(0, str(REPO_ROOT / "src"))
 sys.path.insert(0, str(REPO_ROOT))
 
 from benchmarks import (ablation_opt_state, comm_bytes, comm_reduction,
-                        fig2a_feasibility, fig2b_linear_rate,
-                        fig3_intersection, fig4_deepnet, fig5_quartic,
-                        fig67_nodes, roofline_report, round_throughput)
+                        fault_tolerance, fig2a_feasibility,
+                        fig2b_linear_rate, fig3_intersection, fig4_deepnet,
+                        fig5_quartic, fig67_nodes, roofline_report,
+                        round_throughput)
 
 BENCHES = [
     ("fig2a_feasibility", fig2a_feasibility.main,
@@ -61,6 +62,12 @@ BENCHES = [
                f" hop_bytes="
                f"{r['headline_exchange']['ring_hop_bytes_reduction_G16']:.1f}x"
                " (bar 3x)"),
+    ("fault_tolerance", fault_tolerance.main,
+     lambda r: f"push_sum@5%drop margin="
+               f"{r['headline']['push_sum_gsq_margin']:.1f}x (bar 1) "
+               f"sharded={r['headline_sharded']['push_sum_gsq_margin']:.1f}x"
+               f" unbias={r['headline']['push_sum_unbias_factor']:.0f}x"
+               " (bar 100)"),
 ]
 
 
@@ -77,6 +84,11 @@ HEADLINE_BARS = {
          "int8_moments_reduction_vs_fp32_moments", "bar"),
         ("headline_exchange", "ring_hop_bytes_reduction_G16", "bar"),
     ],
+    "BENCH_fault.json": [
+        ("headline", "push_sum_gsq_margin", "bar"),
+        ("headline", "push_sum_unbias_factor", "unbias_bar"),
+        ("headline_sharded", "push_sum_gsq_margin", "bar"),
+    ],
 }
 
 # fresh smoke re-runs: (name, script, env toggles). Each script exits
@@ -86,6 +98,8 @@ SMOKE_RUNS = [
      {"ROUND_THROUGHPUT_SMOKE": "1"}),
     ("comm_bytes", "benchmarks/comm_bytes.py",
      {"COMM_BYTES_SMOKE": "1"}),
+    ("fault_tolerance", "benchmarks/fault_tolerance.py",
+     {"FAULT_SMOKE": "1"}),
 ]
 
 

@@ -2,22 +2,27 @@
 
 The paper's claim is about communication: T local steps amortize ONE model
 exchange per round. This package makes that exchange a first-class layer —
-topologies (server / ring / gossip / async_stale), flat-buffer wire codecs
-(fp32 / fp16 / bf16 / int8 / topk) applied PER STREAM of the payload
-(params + optimizer moments, DESIGN.md §10), and exact per-round
-per-stream wire-byte accounting — behind the ``Exchange`` protocol that
+topologies (server / ring / gossip / async_stale / push_sum), flat-buffer
+wire codecs (fp32 / fp16 / bf16 / int8 / topk) applied PER STREAM of the
+payload (params + optimizer moments, DESIGN.md §10), exact per-round
+per-stream wire-byte accounting, and deterministic fault injection
+(``FaultPlan``, DESIGN.md §12) — behind the ``Exchange`` protocol that
 ``core.localsgd`` routes both its pytree and packed rounds through.
 """
-from repro.comm.codecs import CODECS, Codec, get_codec
+from repro.comm.codecs import CODECS, Codec, defer_undelivered, get_codec
 from repro.comm.exchange import (TOPOLOGIES, Exchange, default_exchange,
                                  get_exchange)
+from repro.comm.faults import FaultPlan
 from repro.comm.topology import (gossip_matrix, is_doubly_stochastic,
-                                 mixing_matrix, n_edge_sends, ring_matrix,
+                                 mixing_matrix, n_edge_sends,
+                                 push_sum_offsets, ring_matrix,
                                  server_matrix, spectral_gap)
 
 __all__ = [
-    "CODECS", "Codec", "get_codec",
+    "CODECS", "Codec", "defer_undelivered", "get_codec",
     "TOPOLOGIES", "Exchange", "default_exchange", "get_exchange",
+    "FaultPlan",
     "gossip_matrix", "is_doubly_stochastic", "mixing_matrix",
-    "n_edge_sends", "ring_matrix", "server_matrix", "spectral_gap",
+    "n_edge_sends", "push_sum_offsets", "ring_matrix", "server_matrix",
+    "spectral_gap",
 ]

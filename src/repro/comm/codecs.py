@@ -190,6 +190,27 @@ def topk(frac: float = 0.05, *, impl: str = "auto") -> Codec:
                  topk_frac=frac)
 
 
+def defer_undelivered(state: dict, d_hat, delivered):
+    """Error-feedback semantics under packet loss (DESIGN.md §12): a
+    compressed payload that never arrived must DEFER, not vanish. The
+    codec's ``compress`` already moved the shipped entries out of the
+    residual (``residual_out = c - d_hat``); if group g's push was
+    dropped, its shipped entries go BACK into the residual — restoring
+    ``residual = c`` exactly, as if nothing had been selected — and are
+    re-offered next round. ``delivered``: (G,) float mask (1 = arrived);
+    ``d_hat``: the decoded payload per group. No-op for codec states
+    without an EF residual (int8's rng counter advances regardless — the
+    noise was spent on the transmission whether or not it arrived)."""
+    if "residual" not in state:
+        return state
+    def back(res, d):
+        keep = delivered.reshape((-1,) + (1,) * (d.ndim - 1))
+        return res + (1.0 - keep) * d
+
+    return {**state,
+            "residual": jax.tree.map(back, state["residual"], d_hat)}
+
+
 CODECS = ("fp32", "fp16", "bf16", "int8", "topk")
 
 
@@ -205,4 +226,4 @@ def get_codec(name: str, *, impl: str = "auto", chunk: int = 256,
         return int8(chunk=chunk, seed=seed, impl=impl)
     if name == "topk":
         return topk(frac=topk_frac, impl=impl)
-    raise ValueError(f"unknown codec {name!r} (have {CODECS})")
+    raise ValueError(f"unknown codec {name!r}: valid codecs are {CODECS}")

@@ -17,8 +17,29 @@ composes a TOPOLOGY (who talks to whom) with a per-stream CODEC policy
                server averages each group's LAST pushed model. Every
                group's contribution is at most s rounds old; s = 0 is
                exactly ``server``.
+  push_sum     ratio consensus on the directed ring graph (DESIGN.md
+               §12): each node pushes equal shares of a (value, weight)
+               mass pair to its out-neighbors and estimates the model as
+               the ratio. Mass counters (``comm["mass"]`` + per-edge
+               backlogs) make the estimate unbiased under packet loss —
+               an undelivered share stays queued on its edge and the
+               next delivered payload carries it — where the
+               doubly-stochastic topologies above measurably bias.
   none         no communication (W = I, zero wire bytes) — the
                disconnected baseline for ablations and parity tests.
+
+Fault injection (DESIGN.md §12): an optional ``FaultPlan``
+(comm/faults.py — seeded, replayable, pure in ``(round, seed)``) masks
+per-edge packet drops and per-round node stalls/dropouts. server/async
+degrade gracefully — a dropped push keeps that group's LAST delivered
+model in the staleness buffer (bounded-staleness retry), error-feedback
+residuals DEFER undelivered payloads (codecs.defer_undelivered), and the
+round reports a ``participation`` metric. ring/gossip under drops are
+the demonstrated-biased configuration (a receiver substitutes its own
+value for a lost neighbor payload: rows stay stochastic, columns do not
+— the mean drifts); push_sum is the loss-tolerant alternative. No plan
+(the default) leaves every code path bit-exact with the fault-free
+engine.
 
 The round's payload is MULTI-STREAM (DESIGN.md §10): the ``params``
 stream plus one stream per optimizer moment buffer (momentum ``mu``,
@@ -47,9 +68,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comm import codecs as codecs_mod
+from repro.comm import faults as faults_mod
 from repro.comm import topology as topo_mod
 
-TOPOLOGIES = ("server", "ring", "gossip", "async_stale", "none")
+TOPOLOGIES = ("server", "ring", "gossip", "async_stale", "push_sum",
+              "none")
 
 # moment streams default to the uncompressed wire (one shared instance:
 # the identity codec is stateless and pure)
@@ -85,10 +108,35 @@ class Exchange:
     # the (G, N) buffer instead of the staged encode/decode/mix chain;
     # bit-identical by contract). False = the staged reference path.
     fused: bool = True
+    # deterministic fault schedule (comm/faults.py, DESIGN.md §12). None
+    # (default) is the reliable network — every path stays literally the
+    # fault-free code, bit-exact with the PR-5 exchange.
+    fault_plan: Optional[faults_mod.FaultPlan] = None
 
     @property
     def mcodec(self) -> codecs_mod.Codec:
         return self.moment_codec if self.moment_codec is not None else _FP32
+
+    @property
+    def faulty(self) -> bool:
+        """True when a FaultPlan is active on a topology with a wire."""
+        return self.fault_plan is not None and self.topology != "none"
+
+    @property
+    def delivery_rate(self) -> float:
+        """Expected fraction of transmissions delivered per round (1.0
+        for the reliable network) — what reprices the wire accounting
+        under delivered-edge pricing and ``AdaptiveT.from_exchange``."""
+        return (self.fault_plan.expected_delivery
+                if self.fault_plan is not None else 1.0)
+
+    @property
+    def p2p(self) -> bool:
+        """Topologies whose payloads are symmetric point-to-point edges
+        (one transmission is the sender's uplink AND the receiver's
+        downlink, so the byte total counts it once): explicit-W mixing
+        and push_sum."""
+        return self.w is not None or self.topology == "push_sum"
 
     @property
     def lossy_downlink(self) -> bool:
@@ -101,7 +149,7 @@ class Exchange:
         return (self.downlink_codec is not None
                 and not self.downlink_codec.identity
                 and self.w is None
-                and self.topology != "none")
+                and self.topology not in ("none", "push_sum"))
 
     def stream_codec(self, stream: str) -> codecs_mod.Codec:
         """The per-stream codec policy: params get ``codec``, every
@@ -115,14 +163,18 @@ class Exchange:
             base += f"+m:{self.mcodec.name}"
         if self.downlink_codec is not None:
             base += f"+d:{self.downlink_codec.name}"
+        if self.faulty:
+            base += (f"+drop{self.fault_plan.drop_rate:g}"
+                     f"@{self.fault_plan.seed}")
         return base
 
     @property
     def stateful(self) -> bool:
         if self.topology == "none":
             return False   # no wire: the codecs never run, no state
-        return (self.topology == "async_stale" or self.codec.stateful
-                or self.mcodec.stateful or self.lossy_downlink)
+        return (self.topology in ("async_stale", "push_sum")
+                or self.codec.stateful or self.mcodec.stateful
+                or self.lossy_downlink or self.faulty)
 
     @property
     def supports_opt_state_averaging(self) -> bool:
@@ -161,6 +213,43 @@ class Exchange:
                 state["pushed_opt"] = {
                     k: jax.tree.map(jnp.copy, v) for k, v in moments.items()}
             state["round"] = jnp.zeros((), jnp.int32)
+        if self.topology == "server" and self.faulty:
+            # graceful degradation (DESIGN.md §12): under faults the
+            # server path keeps the SAME per-stream staleness buffers as
+            # async_stale — a group whose push drops contributes its last
+            # delivered model instead of deadlocking the round
+            state["pushed"] = jax.tree.map(jnp.copy, params_G)
+            if moments:
+                state["pushed_opt"] = {
+                    k: jax.tree.map(jnp.copy, v) for k, v in moments.items()}
+        if self.topology == "push_sum":
+            # ratio-consensus mass counters (DESIGN.md §12): per-node
+            # weight mass plus per-directed-edge backlog buffers for the
+            # value and weight channels. Invariant: sum(mass) +
+            # sum(backlog_w) == G exactly, every round, under any drop
+            # pattern.
+            offs = topo_mod.push_sum_offsets(self.n_groups)
+
+            def blz(v):
+                return jax.tree.map(
+                    lambda a: jnp.zeros((len(offs),) + a.shape,
+                                        jnp.float32), v)
+
+            state["mass"] = jnp.ones((self.n_groups,), jnp.float32)
+            state["backlog"] = {"params": blz(params_G)}
+            if moments:
+                state["backlog"].update(
+                    {k: blz(v) for k, v in moments.items()})
+            state["backlog_w"] = jnp.zeros(
+                (len(offs), self.n_groups), jnp.float32)
+        if (self.faulty or self.topology == "push_sum") \
+                and "round" not in state:
+            # the fault masks are pure functions of (round, seed): the
+            # counter riding the comm state is what makes a checkpoint
+            # resume replay the exact fault schedule
+            state["round"] = jnp.zeros((), jnp.int32)
+        if self.faulty or self.topology == "push_sum":
+            state["participation"] = jnp.ones((), jnp.float32)
         if self.lossy_downlink:
             # per-stream downlink memory (DESIGN.md §11): the last DECODED
             # broadcast (every receiver holds it, so it is the delta
@@ -211,9 +300,52 @@ class Exchange:
         stream rides through — see DESIGN.md §8/§10)."""
         return jax.tree.map(self._mix_leaf, tree)
 
+    def _masked_hop_leaf(self, v, wm, deficit, act):
+        """One masked W-hop: a receiver substitutes its OWN value for
+        every lost payload (the deficit term keeps rows stochastic so
+        iterates stay in the convex hull — no blowup) and a stalled
+        receiver keeps its value outright."""
+        s1 = (-1,) + (1,) * (v.ndim - 1)
+        v32 = v.astype(jnp.float32)
+        out = (jnp.tensordot(wm, v32, axes=[[1], [0]])
+               + deficit.reshape(s1) * v32)
+        return jnp.where(act.reshape(s1) > 0, out, v32).astype(v.dtype)
+
+    def _mix_faulty(self, tree, rnd):
+        """ring/gossip under a FaultPlan. Self-substitution keeps the
+        masked matrix row-stochastic but its COLUMNS no longer sum to 1,
+        so the G-mean drifts — the measurable bias the bias-regression
+        test pins and push_sum exists to fix (DESIGN.md §12)."""
+        plan, n = self.fault_plan, self.n_groups
+        w = jnp.asarray(self.w, jnp.float32)
+        act = plan.active_mask(rnd, n)
+        y = tree
+        for h in range(self.mix_rounds):
+            m = plan.matrix_mask(rnd, h, n)
+            wm = w * m
+            deficit = 1.0 - jnp.sum(wm, axis=1)
+            y = jax.tree.map(
+                lambda v, _wm=wm, _de=deficit:
+                self._masked_hop_leaf(v, _wm, _de, act), y)
+        return y
+
+    def _edge_participation(self, rnd):
+        """Fraction of this round's TRUE edge transmissions delivered
+        (off-diagonal W-support entries whose mask fired, averaged over
+        hops) — the decentralized analogue of the server path's
+        delivered-push fraction."""
+        sup_np = (np.asarray(self.w) > 0) & ~np.eye(self.n_groups,
+                                                    dtype=bool)
+        tot = max(float(sup_np.sum()), 1.0)
+        sup = jnp.asarray(sup_np, jnp.float32)
+        vals = [jnp.sum(self.fault_plan.matrix_mask(rnd, h, self.n_groups)
+                        * sup) / tot
+                for h in range(self.mix_rounds)]
+        return sum(vals) / float(len(vals))
+
     # -- the communication step -------------------------------------------
 
-    def _decentral_lossy(self, x_G, x0_G, cstate, codec):
+    def _decentral_lossy(self, x_G, x0_G, cstate, codec, rnd=None):
         """ring/gossip with a lossy codec: RE-compress at every mixing hop
         (each hop's payload is a fresh wire transmission — the byte
         accounting already counts per hop, and now the noise model does
@@ -221,15 +353,30 @@ class Exchange:
         (decoded) value — hop 0 vs the round start, hop h vs hop h-1's
         decoded payload — so what's compressed is a hop-sized difference
         that shrinks with consensus, and error feedback (top-k residual)
-        updates once per hop. Returns (mixed, codec_state)."""
+        updates once per hop. Returns (mixed, codec_state). With ``rnd``
+        set (an active FaultPlan) every hop is masked by the SAME
+        ``matrix_mask(rnd, hop)`` the identity streams consume — one
+        physical transmission carries the whole multi-stream payload."""
         w = jnp.asarray(self.w, jnp.float32)
+        plan = self.fault_plan if rnd is not None else None
+        act = (plan.active_mask(rnd, self.n_groups)
+               if plan is not None else None)
         y, ref = x_G, x0_G
-        for _ in range(self.mix_rounds):
+        for h in range(self.mix_rounds):
             delta = jax.tree.map(lambda a, b: a - b, y, ref)
             delta_hat, cstate = codec.compress(delta, cstate)
             y_hat = jax.tree.map(lambda b, d: b + d, ref, delta_hat)
             ref = y_hat
-            y = jax.tree.map(lambda v: self._mix_leaf_once(v, w), y_hat)
+            if plan is None:
+                y = jax.tree.map(
+                    lambda v: self._mix_leaf_once(v, w), y_hat)
+            else:
+                m = plan.matrix_mask(rnd, h, self.n_groups)
+                wm = w * m
+                deficit = 1.0 - jnp.sum(wm, axis=1)
+                y = jax.tree.map(
+                    lambda v, _wm=wm, _de=deficit:
+                    self._masked_hop_leaf(v, _wm, _de, act), y_hat)
         return y, cstate
 
     def _fusable(self, codec, x) -> bool:
@@ -240,7 +387,11 @@ class Exchange:
         per-group threshold is known; ring/gossip re-select per hop and
         keep the staged path). async keeps the staged path (the
         staleness mask interleaves); pytree streams have no flat wire
-        format."""
+        format. An active FaultPlan keeps the staged path for every
+        stream — the masks interleave with the mixing like the staleness
+        schedule does."""
+        if self.faulty:
+            return False
         if not (self.fused and isinstance(x, jax.Array) and x.ndim == 2):
             return False
         if codec.topk_frac > 0:
@@ -295,10 +446,15 @@ class Exchange:
         vanishes as rounds converge. Every stream follows the same
         topology; each keeps its own codec state and (async) staleness
         buffer. Returns ``(mixed: {name: value}, new_comm_state)``."""
+        if self.topology == "push_sum":
+            return self._push_sum_streams(xs, comm_state)
+        plan = self.fault_plan if self.topology != "none" else None
+        rnd = comm_state.get("round")
         new_state = dict(comm_state)
         cstates = dict(comm_state.get("codec", {}))
         touched = False
         x_hat = {}
+        d_hats = {}
         mixed = {}
         for name, x in xs.items():
             codec = self.stream_codec(name)
@@ -317,8 +473,9 @@ class Exchange:
                 continue
             if self.w is not None:
                 # decentralized + lossy: codec applied per mixing hop
-                y, cs = self._decentral_lossy(x, xs0[name],
-                                              cstates.get(name, {}), codec)
+                y, cs = self._decentral_lossy(
+                    x, xs0[name], cstates.get(name, {}), codec,
+                    rnd=rnd if plan is not None else None)
                 mixed[name] = y
                 if codec.stateful:
                     cstates[name] = cs
@@ -327,19 +484,58 @@ class Exchange:
             delta = jax.tree.map(lambda a, b: a - b, x, xs0[name])
             d_hat, cs = codec.compress(delta, cstates.get(name, {}))
             x_hat[name] = jax.tree.map(lambda b, d: b + d, xs0[name], d_hat)
+            d_hats[name] = d_hat
             if codec.stateful:
                 cstates[name] = cs
                 touched = True
-        if touched:
-            new_state["codec"] = cstates
-        if self.topology != "async_stale":
+        if plan is not None and self.w is not None:
+            # faulty ring/gossip: masked hops for the identity streams
+            # (lossy streams were masked inside _decentral_lossy above)
+            mixed.update(
+                {k: self._mix_faulty(v, rnd) for k, v in x_hat.items()})
+            if touched:
+                new_state["codec"] = cstates
+            new_state["round"] = rnd + 1
+            new_state["participation"] = self._edge_participation(rnd)
+            return self._apply_downlink(mixed, comm_state, new_state)
+        if self.topology != "async_stale" and not (
+                self.topology == "server" and plan is not None):
+            if touched:
+                new_state["codec"] = cstates
             mixed.update({k: self.mix(v) for k, v in x_hat.items()})
             return self._apply_downlink(mixed, comm_state, new_state)
-        # bounded-staleness server: refresh only this round's pushers,
-        # average everyone's last push — per stream (params + moments each
-        # keep their own staleness buffer, refreshed by the same mask)
+        # bounded-staleness server: refresh only the groups whose push
+        # ARRIVED this round (the staleness schedule for async_stale,
+        # everyone for the faulty server), average everyone's last
+        # delivered push — per stream. A dropped push is re-sent next
+        # cycle from the same buffer: bounded-staleness retry
+        # (DESIGN.md §12).
         rnd = comm_state["round"]
-        fresh = (jnp.arange(self.n_groups) + rnd) % (self.staleness + 1) == 0
+        if self.topology == "async_stale":
+            sched = (jnp.arange(self.n_groups) + rnd) \
+                % (self.staleness + 1) == 0
+        else:
+            sched = jnp.ones((self.n_groups,), bool)
+        if plan is not None:
+            delivered = plan.push_mask(rnd, self.n_groups)
+            fresh = jnp.logical_and(sched, delivered > 0)
+            # EF deferral (DESIGN.md §12): only FAULTS defer — the
+            # staleness schedule's own non-pushing rounds keep their
+            # drop-by-design semantics (async + topk stays refused)
+            arrived = jnp.where(sched, delivered,
+                                jnp.ones_like(delivered))
+            for name, d in d_hats.items():
+                if "residual" in cstates.get(name, {}):
+                    cstates[name] = codecs_mod.defer_undelivered(
+                        cstates[name], d, arrived)
+                    touched = True
+            n_sched = jnp.maximum(jnp.sum(sched.astype(jnp.float32)), 1.0)
+            new_state["participation"] = (
+                jnp.sum(jnp.where(sched, delivered, 0.0)) / n_sched)
+        else:
+            fresh = sched
+        if touched:
+            new_state["codec"] = cstates
 
         def refresh(pushed, x):
             keep = fresh.reshape((-1,) + (1,) * (x.ndim - 1))
@@ -358,6 +554,116 @@ class Exchange:
             new_state["pushed_opt"] = pushed_opt
         new_state["round"] = rnd + 1
         return self._apply_downlink(mixed, comm_state, new_state)
+
+    def _push_sum_streams(self, xs: dict, comm_state: dict):
+        """Push-sum ratio consensus (DESIGN.md §12). Every live node
+        splits a (value, weight) mass pair into ``deg + 1`` equal shares
+        — one kept, one pushed along each circulant offset — and the
+        model estimate is the ratio value / weight. Per-directed-edge
+        BACKLOG buffers make the exchange loss-tolerant: each hop
+        enqueues the share on its edge; a delivered payload carries the
+        edge's ENTIRE queued mass (one delivery repairs any run of
+        drops), an undelivered one leaves it queued. Mass is conserved
+        EXACTLY — sum(mass) + sum(backlog_w) == G every round, under any
+        drop pattern — so the ratio stays an unbiased convex combination
+        of (possibly queued-stale) group models where masked
+        doubly-stochastic mixing drifts the mean. A cast codec
+        (fp16/bf16) quantizes the transmitted VALUE payload and the cast
+        residue stays in the sender's backlog (transmitted =
+        cast(backlog + share); backlog' -= delivered * transmitted), so
+        compression also defers rather than loses; the fp32 weight
+        counter rides exact (+4 bytes/edge in the accounting). Elastic
+        membership rides the same counters: an absent node's mass
+        freezes, queued shares to/from it drain on rejoin."""
+        G = self.n_groups
+        offs = topo_mod.push_sum_offsets(G)
+        for name in xs:
+            codec = self.stream_codec(name)
+            if not (codec.identity or codec.name in ("fp16", "bf16")):
+                raise NotImplementedError(
+                    f"push_sum + {codec.name}: the push-sum wire carries "
+                    "cumulative (value, weight) mass, not round deltas "
+                    "(DESIGN.md §12); valid push_sum codecs: 'fp32', "
+                    "'fp16', 'bf16'")
+        new_state = dict(comm_state)
+        rnd = comm_state["round"]
+        if not offs:                               # G == 1: no wire
+            new_state["round"] = rnd + 1
+            return dict(xs), new_state
+        plan = self.fault_plan
+        a = 1.0 / (len(offs) + 1.0)
+        act = (plan.active_mask(rnd, G) if plan is not None
+               else jnp.ones((G,), jnp.float32))
+        # per-(hop, offset) masks, generated OUTSIDE the per-leaf math:
+        # every stream of one physical transmission shares one mask, and
+        # the shard_map path consumes these identical arrays
+        masks, incs = [], []
+        for h in range(self.mix_rounds):
+            mh, ih = [], []
+            for di, d in enumerate(offs):
+                bern = (plan.edge_mask(rnd, h, di, G) if plan is not None
+                        else jnp.ones((G,), jnp.float32))
+                src = jnp.roll(act, d)   # sender liveness, receiver slot
+                ih.append(src)
+                mh.append(bern * src * act)
+            masks.append(mh)
+            incs.append(ih)
+        w = comm_state["mass"]
+        blw = comm_state["backlog_w"]
+        nums = {k: jax.tree.map(
+                    lambda v: v.astype(jnp.float32)
+                    * w.reshape((G,) + (1,) * (v.ndim - 1)), v)
+                for k, v in xs.items()}
+        backlog = {k: comm_state["backlog"][k] for k in xs}
+        for h in range(self.mix_rounds):
+            # weight channel: same arithmetic as the values, scalar per
+            # node, no codec (the counter must stay exact)
+            new_w = jnp.where(act > 0, a * w, w)
+            new_blw = []
+            for di, d in enumerate(offs):
+                b = blw[di] + incs[h][di] * jnp.roll(a * w, d)
+                new_w = new_w + masks[h][di] * b
+                new_blw.append(b - masks[h][di] * b)
+            for k in list(nums):
+                codec = self.stream_codec(k)
+
+                def hop_leaf(x, bl, _codec=codec, _h=h):
+                    s1 = (G,) + (1,) * (x.ndim - 1)
+                    y = jnp.where(act.reshape(s1) > 0, a * x, x)
+                    nb = []
+                    for di, d in enumerate(offs):
+                        b = bl[di] + (incs[_h][di].reshape(s1)
+                                      * jnp.roll(a * x, d, axis=0))
+                        t = b if _codec.identity \
+                            else _codec.compress(b, {})[0]
+                        m = masks[_h][di].reshape(s1)
+                        y = y + m * t
+                        nb.append(b - m * t)
+                    return (y, jnp.stack(nb))
+
+                pairs = jax.tree.map(hop_leaf, nums[k], backlog[k])
+                is_pair = (lambda t: isinstance(t, tuple))
+                nums[k] = jax.tree.map(lambda p: p[0], pairs,
+                                       is_leaf=is_pair)
+                backlog[k] = jax.tree.map(lambda p: p[1], pairs,
+                                          is_leaf=is_pair)
+            w = new_w
+            blw = jnp.stack(new_blw)
+        mixed = {}
+        for k, v in xs.items():
+            def ratio(num, orig):
+                den = w.reshape((G,) + (1,) * (num.ndim - 1))
+                return (num / den).astype(orig.dtype)
+
+            mixed[k] = jax.tree.map(ratio, nums[k], v)
+        new_state["mass"] = w
+        new_state["backlog"] = backlog
+        new_state["backlog_w"] = blw
+        new_state["round"] = rnd + 1
+        new_state["participation"] = (
+            sum(jnp.mean(m) for mh in masks for m in mh)
+            / float(self.mix_rounds * len(offs)))
+        return mixed, new_state
 
     def _apply_downlink(self, mixed: dict, comm_state: dict,
                         new_state: dict):
@@ -406,6 +712,14 @@ class Exchange:
             return float(self.n_groups)
         if self.topology == "async_stale":
             return self.n_groups / (self.staleness + 1)
+        if self.topology == "push_sum":
+            # delivered-edge pricing (DESIGN.md §12): a dropped payload
+            # moves no bytes and the sender's queued mass rides the NEXT
+            # delivered payload at no extra width, so the expected
+            # physical transfer scales with the delivery rate
+            offs = topo_mod.push_sum_offsets(self.n_groups)
+            return (len(offs) * self.n_groups * self.mix_rounds
+                    * self.delivery_rate)
         return float(topo_mod.n_edge_sends(self.w) * self.mix_rounds)
 
     def receivers_per_round(self) -> float:
@@ -427,6 +741,10 @@ class Exchange:
         ITS codec (params via ``codec``, moments via ``moment_codec`` —
         the fp32 moment surcharge this replaces was ``4 * moment_elems``)."""
         out = {"params": self.codec.wire_bytes(n_params)}
+        if self.topology == "push_sum":
+            # every push-sum edge payload carries the fp32 weight-mass
+            # counter alongside the value buffer (DESIGN.md §12)
+            out["params"] += 4
         for k, n in (moment_sizes or {}).items():
             out[k] = self.mcodec.wire_bytes(n)
         return out
@@ -464,7 +782,7 @@ class Exchange:
         out = {}
         for k, b in per.items():
             up = int(round(s * b))
-            out[k] = up if self.w is not None \
+            out[k] = up if self.p2p \
                 else up + int(round(r * per_dn[k]))
         return out
 
@@ -502,31 +820,47 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
                  staleness: int = 1, seed: int = 0, impl: str = "auto",
                  chunk: int = 256, topk_frac: float = 0.05,
                  moment_codec: str = "fp32", downlink_codec: str = "",
-                 fused: bool = True) -> Exchange:
+                 fused: bool = True, drop_rate: float = 0.0,
+                 stall_rate: float = 0.0, fault_seed: int = 0,
+                 dropouts=()) -> Exchange:
     """Build an Exchange from names (the ``--comm`` / ``--codec`` /
     ``--moment-codec`` / ``--downlink-codec`` flags). ``moment_codec``
     applies to every moment stream of the payload (DESIGN.md §10); topk
     is refused there. ``downlink_codec`` ("" = default: the idealized
     broadcast priced at uplink widths) compresses the server/async
-    broadcast reply independently of the uplink (DESIGN.md §11)."""
+    broadcast reply independently of the uplink (DESIGN.md §11).
+    ``drop_rate`` / ``stall_rate`` / ``fault_seed`` / ``dropouts``
+    assemble a deterministic FaultPlan (the ``--drop-rate`` /
+    ``--fault-seed`` flags, DESIGN.md §12); all-zero (the default)
+    attaches NO plan, keeping every path bit-exact with the fault-free
+    engine. Every refusal below names the valid alternatives."""
     if topology not in TOPOLOGIES:
-        raise ValueError(f"unknown topology {topology!r} "
-                         f"(have {TOPOLOGIES})")
+        raise ValueError(f"unknown topology {topology!r}: valid "
+                         f"topologies are {TOPOLOGIES}")
     if downlink_codec:
         if topology in ("ring", "gossip"):
             raise NotImplementedError(
                 "ring/gossip edge payloads are symmetric — each edge "
                 "transmission IS both one node's uplink and its "
                 "neighbor's downlink, so there is no separate downlink "
-                "to compress (DESIGN.md §11)")
+                "to compress (DESIGN.md §11); valid downlink_codec "
+                "topologies: 'server', 'async_stale'")
+        if topology == "push_sum":
+            raise NotImplementedError(
+                "push_sum edge payloads already carry the (value, "
+                "weight) mass both ways — there is no broadcast reply "
+                "to compress (DESIGN.md §12); valid downlink_codec "
+                "topologies: 'server', 'async_stale'")
         if topology == "none":
             raise NotImplementedError(
                 "the 'none' topology has no wire; a downlink codec "
-                "would compress a broadcast that never happens")
+                "would compress a broadcast that never happens; valid "
+                "downlink_codec topologies: 'server', 'async_stale'")
         if downlink_codec == "topk":
             raise NotImplementedError(
                 "topk is not supported as a downlink codec (DESIGN.md "
-                "§11): use fp16/bf16/int8 for the broadcast reply")
+                "§11); valid downlink codecs: 'fp32', 'fp16', 'bf16', "
+                "'int8'")
     if topology == "async_stale" and codec == "topk":
         # the staleness schedule DROPS non-pushing groups' deltas by
         # design; an error-feedback residual would instead absorb their
@@ -534,7 +868,8 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
         raise NotImplementedError(
             "async_stale + topk: error feedback assumes every round's "
             "payload is delivered, but the staleness schedule drops "
-            "non-pushing rounds (DESIGN.md §8)")
+            "non-pushing rounds (DESIGN.md §8); valid async_stale "
+            "codecs: 'fp32', 'fp16', 'bf16', 'int8'")
     if moment_codec == "topk":
         # moments are re-estimated each step, not accumulated deltas of a
         # fixed target: delaying dropped moment mass via error feedback
@@ -542,8 +877,37 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
         # sparsity pattern of |delta| has no meaning for second moments
         raise NotImplementedError(
             "topk is not supported as a moment codec (DESIGN.md §10): "
-            "error feedback would re-offer rounds-stale moment mass; use "
-            "fp32/fp16/bf16/int8 for the moment streams")
+            "error feedback would re-offer rounds-stale moment mass; "
+            "valid moment codecs: 'fp32', 'fp16', 'bf16', 'int8'")
+    if topology == "push_sum":
+        # refusal matrix (DESIGN.md §12): the push-sum wire carries
+        # cumulative (value, weight) mass counters, not round deltas —
+        # int8's per-round delta scaling and topk's error feedback have
+        # no delta reference to code against. Cast codecs work: the
+        # cast residue stays in the edge backlog (deferred, not lost).
+        if codec in ("int8", "topk"):
+            raise NotImplementedError(
+                f"push_sum + {codec}: the push-sum wire carries "
+                "cumulative mass, not round deltas (DESIGN.md §12); "
+                "valid push_sum codecs: 'fp32', 'fp16', 'bf16'")
+        if moment_codec in ("int8", "topk"):
+            raise NotImplementedError(
+                f"push_sum + moment_codec={moment_codec!r}: moment "
+                "streams ride the same mass-counter wire (DESIGN.md "
+                "§12); valid push_sum moment codecs: 'fp32', 'fp16', "
+                "'bf16'")
+    plan = None
+    if drop_rate or stall_rate or dropouts:
+        plan = faults_mod.FaultPlan(
+            seed=fault_seed, drop_rate=drop_rate, stall_rate=stall_rate,
+            dropouts=tuple(tuple(d) for d in dropouts))
+        if plan.trivial:
+            plan = None          # all-zero plan: keep the PR-5 code path
+    if plan is not None and topology == "none":
+        raise ValueError(
+            "topology 'none' has no wire to drop packets from; valid "
+            "fault-injection topologies: 'server', 'ring', 'gossip', "
+            "'async_stale', 'push_sum'")
     c = codecs_mod.get_codec(codec, impl=impl, chunk=chunk,
                              topk_frac=topk_frac, seed=seed)
     # moment streams share one codec instance seeded apart from the params
@@ -562,7 +926,8 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
     return Exchange(topology=topology, codec=c, n_groups=n_groups,
                     mix_rounds=mix_rounds,
                     staleness=staleness if topology == "async_stale" else 0,
-                    w=w, moment_codec=mc, downlink_codec=dc, fused=fused)
+                    w=w, moment_codec=mc, downlink_codec=dc, fused=fused,
+                    fault_plan=plan)
 
 
 def default_exchange(n_groups: int) -> Exchange:

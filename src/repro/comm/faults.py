@@ -1,0 +1,153 @@
+"""Deterministic fault injection for the exchange subsystem (DESIGN.md §12).
+
+A ``FaultPlan`` is a seeded, replayable description of an unreliable
+network: per-edge packet drops (Bernoulli per directed edge per hop),
+per-round node stalls (Bernoulli per node) and explicit dropout windows
+(node g absent for rounds [r0, r1) — elastic membership). Every mask is a
+PURE function of ``(round, seed)`` computed by a counter-based splitmix32
+hash over ``(seed, lane, round, hop, sub, index)`` — plain elementwise
+uint32 arithmetic on an iota, NOT ``jax.random``: with this jax build's
+non-partitionable threefry, GSPMD sharding propagation can rewrite the
+threefry lowering and CHANGE the drawn bits between the eager and the
+jitted-sharded graph. The hash draws are value-identical under any
+partitioning, so
+
+* a run replays bit-for-bit from a checkpoint (the round counter rides
+  the comm state),
+* the replicated and shard_map exchanges consume IDENTICAL masks (the
+  masks are generated outside the shard_map block at full (G,) shape,
+  like the int8 stochastic-rounding noise — DESIGN.md §9),
+* every test and benchmark cell is reproducible from ``(seed, drop_rate,
+  stall_rate, dropouts)`` alone.
+
+Mask semantics (1.0 = delivered / active, 0.0 = lost / stalled):
+
+* ``edge_mask``    one p2p transmission lane (per hop, per circulant
+                   offset) — masks ppermute/all_gather hop payloads and
+                   push-sum edge deliveries.
+* ``matrix_mask``  dense (G, G) delivery mask for one W-hop; entry
+                   [j, i] gates the i -> j payload (aligned with
+                   ``W[j, i]``). The diagonal is always 1 — a node never
+                   loses its own value.
+* ``active_mask``  per-round node liveness: stalls (random) and dropout
+                   windows (static). A stalled node sends nothing that
+                   round and consumes nothing; its queued mass waits.
+* ``push_mask``    server-uplink delivery (edge drop x sender liveness).
+
+The plan is a frozen, hashable dataclass so the jitted round can close
+over it like the Exchange itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# hash lanes keeping the mask families statistically independent
+_LANE_EDGE = 1
+_LANE_STALL = 2
+_LANE_PUSH = 3
+_LANE_MATRIX = 4
+
+_GOLD = 0x9E3779B9          # 2^32 / golden ratio: Weyl-sequence stride
+
+
+def _mix(x):
+    """splitmix32 finalizer: full-avalanche elementwise uint32 hash."""
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded fault schedule: ``drop_rate`` per-transmission loss,
+    ``stall_rate`` per-(round, node) stall probability, ``dropouts`` a
+    tuple of ``(g, r0, r1)`` windows during which node g is absent."""
+    seed: int = 0
+    drop_rate: float = 0.0
+    stall_rate: float = 0.0
+    dropouts: Tuple[Tuple[int, int, int], ...] = ()
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop_rate < 1.0:
+            raise ValueError(f"drop_rate {self.drop_rate} not in [0, 1)")
+        if not 0.0 <= self.stall_rate < 1.0:
+            raise ValueError(f"stall_rate {self.stall_rate} not in [0, 1)")
+
+    @property
+    def trivial(self) -> bool:
+        """True when the plan injects nothing (all masks identically 1);
+        ``get_exchange`` normalizes trivial plans away so the default
+        path stays literally the PR-5 code."""
+        return (self.drop_rate == 0.0 and self.stall_rate == 0.0
+                and not self.dropouts)
+
+    @property
+    def expected_delivery(self) -> float:
+        """Expected fraction of transmissions delivered per round — the
+        delivery rate ``AdaptiveT.from_exchange`` reprices the comm cost
+        with (dropout windows are transient, not priced)."""
+        return (1.0 - self.drop_rate) * (1.0 - self.stall_rate) ** 2
+
+    # -- keyed mask primitives (jittable, pure in round) -------------------
+
+    def _key(self, lane: int, rnd, hop: int = 0, sub: int = 0):
+        """uint32 hash state from the (seed, lane, round, hop, sub)
+        counter chain — ``rnd`` may be a traced scalar."""
+        h = jnp.uint32(self.seed & 0xFFFFFFFF)
+        for w in (lane, rnd, hop, sub):
+            w32 = jnp.asarray(w).astype(jnp.uint32)
+            h = _mix(h ^ (w32 * jnp.uint32(_GOLD) + jnp.uint32(1)))
+        return h
+
+    def _uniform(self, key, shape):
+        """[0, 1) uniforms: one hash per counter index. Elementwise ops
+        over an iota are value-invariant under jit AND sharding."""
+        n = 1
+        for s in shape:
+            n *= s
+        idx = jnp.arange(n, dtype=jnp.uint32)
+        bits = _mix(key ^ (idx * jnp.uint32(_GOLD) + jnp.uint32(1)))
+        return (bits.astype(jnp.float32) / jnp.float32(2 ** 32)) \
+            .reshape(shape)
+
+    def _deliver(self, key, shape):
+        if self.drop_rate == 0.0:
+            return jnp.ones(shape, jnp.float32)
+        u = self._uniform(key, shape)
+        return (u >= self.drop_rate).astype(jnp.float32)
+
+    def edge_mask(self, rnd, hop: int, offset_idx: int, n: int):
+        """(n,) delivery mask for one transmission lane — receiver-indexed
+        entries of the ``offset_idx``-th circulant offset at ``hop``."""
+        return self._deliver(self._key(_LANE_EDGE, rnd, hop, offset_idx),
+                             (n,))
+
+    def matrix_mask(self, rnd, hop: int, n: int):
+        """(n, n) delivery mask for one dense W-hop; [j, i] gates i -> j
+        (sender liveness folded in), diagonal pinned to 1."""
+        m = self._deliver(self._key(_LANE_MATRIX, rnd, hop), (n, n))
+        act = self.active_mask(rnd, n)
+        m = m * act[None, :]                   # column i: sender i stalled
+        return jnp.where(jnp.eye(n, dtype=bool), 1.0, m)
+
+    def active_mask(self, rnd, n: int):
+        """(n,) liveness this round: 1 = participating. Stalls are
+        Bernoulli per (round, node); dropout windows are static."""
+        if self.stall_rate > 0.0:
+            u = self._uniform(self._key(_LANE_STALL, rnd), (n,))
+            act = (u >= self.stall_rate).astype(jnp.float32)
+        else:
+            act = jnp.ones((n,), jnp.float32)
+        for g, r0, r1 in self.dropouts:
+            absent = jnp.logical_and(rnd >= r0, rnd < r1)
+            act = act.at[g].set(jnp.where(absent, 0.0, act[g]))
+        return act
+
+    def push_mask(self, rnd, n: int):
+        """(n,) server-uplink delivery: the push of a stalled/absent node
+        never leaves it, and a live node's push drops at ``drop_rate``."""
+        m = self._deliver(self._key(_LANE_PUSH, rnd), (n,))
+        return m * self.active_mask(rnd, n)

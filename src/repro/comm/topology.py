@@ -77,8 +77,25 @@ def mixing_matrix(name: str, m: int, seed: int = 0) -> np.ndarray:
         return ring_matrix(m)
     if name == "gossip":
         return gossip_matrix(m, seed=seed)
-    raise ValueError(f"unknown topology {name!r} "
-                     "(have server, ring, gossip)")
+    raise ValueError(
+        f"unknown topology {name!r}: valid mixing-matrix topologies are "
+        "'server', 'ring', 'gossip' (push_sum is matrix-free ratio "
+        "consensus — see push_sum_offsets; async_stale/none never mix "
+        "through W)")
+
+
+def push_sum_offsets(m: int) -> tuple:
+    """Directed circulant offsets of the push-sum communication graph
+    (DESIGN.md §12): the ring backbone — node g pushes shares to
+    ``(g + d) % m`` for each offset d. Regular out-degree ``len(offsets)``
+    so every node splits its value/weight mass into
+    ``len(offsets) + 1`` equal shares (one kept). m = 1 needs no wire;
+    m = 2 has a single edge each way (offset 1 covers both directions)."""
+    if m <= 1:
+        return ()
+    if m == 2:
+        return (1,)
+    return (1, m - 1)
 
 
 def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-9) -> bool:

@@ -56,6 +56,7 @@ class AdaptiveT:
     def from_exchange(cls, step_time_s: float, exchange, n_params: int,
                       moment_sizes=None, *,
                       bandwidth_bytes_per_s: float = 50e9,
+                      delivery_rate: Optional[float] = None,
                       **kw) -> "AdaptiveT":
         """r priced from an Exchange's OWN stream-resolved accounting
         (DESIGN.md §10): the payload is the params through the params
@@ -63,10 +64,25 @@ class AdaptiveT:
         switching ``moment_codec`` (int8 moments cut adamw's dominant
         wire term ~4x) changes r, and with it the cost-optimal T*.
         ``moment_sizes``: {stream: elems} of the moment buffers the round
-        averages (omit for params-only / average_opt_state=False)."""
+        averages (omit for params-only / average_opt_state=False).
+
+        On a lossy network (DESIGN.md §12) a round's accounted bytes
+        understate the cost of USEFUL communication: a payload that
+        needed 1/delivery attempts (server retries from the pushed
+        buffer) — or whose queued mass arrives a round late
+        (push_sum's delivered-edge pricing) — buys less consensus per
+        round. ``delivery_rate`` (default: the exchange's own FaultPlan
+        expectation) divides the accounted bytes by the expected
+        delivery fraction, so faults make communication more expensive
+        per useful round, shrink r, and push T* UP — fewer, longer
+        rounds on an unreliable network."""
         wire = exchange.wire_bytes_per_round(n_params,
                                              moment_sizes=moment_sizes)
-        return cls.from_comm_bytes(step_time_s, wire,
+        if delivery_rate is None:
+            delivery_rate = getattr(exchange, "delivery_rate", 1.0)
+        if not 0.0 < delivery_rate <= 1.0:
+            raise ValueError(f"delivery_rate {delivery_rate} not in (0, 1]")
+        return cls.from_comm_bytes(step_time_s, wire / delivery_rate,
                                    bandwidth_bytes_per_s, **kw)
 
     @property

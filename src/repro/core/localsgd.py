@@ -120,6 +120,20 @@ def _check_comm_state(exch, state_G, mkeys=()):
             "buffers; build the train state with init_state(..., "
             "exchange=...) so comm['pushed_opt'] is allocated "
             "(DESIGN.md §10)")
+    if (exch.topology == "push_sum"
+            and "mass" not in state_G.get("comm", {})):
+        raise ValueError(
+            "push_sum is ratio consensus: every round needs the mass "
+            "counters and per-edge backlog buffers; build the train state "
+            "with init_state(..., exchange=...) so comm['mass'] / "
+            "comm['backlog'] are allocated (DESIGN.md §12)")
+    if (exch.faulty and exch.topology == "server"
+            and "pushed" not in state_G.get("comm", {})):
+        raise ValueError(
+            "a faulty server exchange retries dropped pushes from "
+            "per-group staleness buffers; build the train state with "
+            "init_state(..., exchange=...) so comm['pushed'] is "
+            "allocated (DESIGN.md §12)")
 
 
 def _round_wire_bytes(exch, params_G, opt_G, avg_opt: bool,
@@ -329,6 +343,10 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
         metrics.update(_round_wire_bytes(
             exch, st["params"], st["opt"], cfg.average_opt_state,
             cfg.n_groups))
+        if "participation" in comm_state:
+            # fraction of scheduled payloads that arrived this round
+            # (1.0 on a clean network — DESIGN.md §12)
+            metrics["participation"] = comm_state["participation"]
         out = {"params": mixed["params"], "opt": new_opt}
         if "comm" in state_G:
             out["comm"] = comm_state
@@ -511,6 +529,10 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
         metrics.update(_round_wire_bytes(
             exch, state_G["params"], state_G["opt"],
             cfg.average_opt_state, cfg.n_groups))
+        if "participation" in comm_state:
+            # fraction of scheduled payloads that arrived this round
+            # (1.0 on a clean network — DESIGN.md §12)
+            metrics["participation"] = comm_state["participation"]
         out = {"params": mixed["params"], "opt": new_opt}
         if had_comm:
             out["comm"] = comm_state

@@ -71,7 +71,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             packed: bool = False, comm: str = "server",
             codec: str = "fp32", mix_rounds: int = 1,
             staleness: int = 1, impl: str = "auto",
-            moment_codec: str = "fp32", downlink_codec: str = "") -> dict:
+            moment_codec: str = "fp32", downlink_codec: str = "",
+            drop_rate: float = 0.0, stall_rate: float = 0.0,
+            fault_seed: int = 0) -> dict:
     import dataclasses as _dc
 
     import jax
@@ -95,7 +97,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
               "comm": comm, "codec": codec, "mix_rounds": mix_rounds,
               "staleness": staleness, "impl": impl,
               "moment_codec": moment_codec,
-              "downlink_codec": downlink_codec}
+              "downlink_codec": downlink_codec,
+              "drop_rate": drop_rate, "stall_rate": stall_rate,
+              "fault_seed": fault_seed}
         if moe_impl:
             kw["moe_impl"] = moe_impl
     elif shape.kind == "prefill":
@@ -237,8 +241,9 @@ def main() -> None:
                          "sharded packed path on multi-device meshes)")
     ap.add_argument("--comm", default="server",
                     choices=["server", "ring", "gossip", "async_stale",
-                             "none"],
-                    help="exchange topology (repro.comm, DESIGN.md §8)")
+                             "push_sum", "none"],
+                    help="exchange topology (repro.comm, DESIGN.md §8; "
+                         "push_sum is loss-tolerant ratio consensus)")
     ap.add_argument("--codec", default="fp32",
                     choices=["fp32", "fp16", "bf16", "int8", "topk"],
                     help="wire codec; int8/topk need --packed")
@@ -256,6 +261,13 @@ def main() -> None:
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
                     help="bounded staleness s (async_stale)")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="deterministic fault injection (DESIGN.md §12): "
+                         "per-edge packet-drop probability in [0, 1)")
+    ap.add_argument("--stall-rate", type=float, default=0.0,
+                    help="per-round node stall probability in [0, 1)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="FaultPlan mask-stream seed")
     ap.add_argument("--moe-impl", default="")
     ap.add_argument("--save-hlo", action="store_true")
     # §Perf hillclimb knobs ---------------------------------------------
@@ -292,6 +304,12 @@ def main() -> None:
             extra += ["--mix-rounds", str(args.mix_rounds)]
         if args.staleness != 1:
             extra += ["--staleness", str(args.staleness)]
+        if args.drop_rate:
+            extra += ["--drop-rate", str(args.drop_rate)]
+        if args.stall_rate:
+            extra += ["--stall-rate", str(args.stall_rate)]
+        if args.fault_seed:
+            extra += ["--fault-seed", str(args.fault_seed)]
         if args.impl != "auto":
             extra += ["--impl", args.impl]
         sys.exit(1 if drive_all(args.multi_pod, args.tag, args.force,
@@ -308,7 +326,10 @@ def main() -> None:
                       packed=args.packed, comm=args.comm, codec=args.codec,
                       mix_rounds=args.mix_rounds, staleness=args.staleness,
                       impl=args.impl, moment_codec=args.moment_codec,
-                      downlink_codec=args.downlink_codec)
+                      downlink_codec=args.downlink_codec,
+                      drop_rate=args.drop_rate,
+                      stall_rate=args.stall_rate,
+                      fault_seed=args.fault_seed)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

@@ -144,7 +144,9 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      comm: str = "server", codec: str = "fp32",
                      mix_rounds: int = 1, staleness: int = 1,
                      impl: str = "auto", moment_codec: str = "fp32",
-                     downlink_codec: str = "") -> BuiltStep:
+                     downlink_codec: str = "", drop_rate: float = 0.0,
+                     stall_rate: float = 0.0,
+                     fault_seed: int = 0) -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
     on an fsdp mesh (params additionally sharded over "fsdp").
@@ -168,11 +170,12 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     sharded or single-device packed paths only), "jnp" (one XLA fusion),
     "auto" (pallas where supported, else jnp)."""
     if mode == "sync" and (comm != "server" or codec != "fp32"
-                           or moment_codec != "fp32" or downlink_codec):
+                           or moment_codec != "fp32" or downlink_codec
+                           or drop_rate or stall_rate):
         raise ValueError(
-            "comm/codec select the local-SGD model exchange; sync-DP "
-            "all-reduces gradients every step and has no exchange — "
-            "drop the flags or use mode='localsgd'")
+            "comm/codec/fault flags select the local-SGD model exchange; "
+            "sync-DP all-reduces gradients every step and has no "
+            "exchange — drop the flags or use mode='localsgd'")
     if moe_impl:
         cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
     model = build_model(cfg, schedule=schedule)
@@ -206,7 +209,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
         return _build_packed_train_step(cfg, shape, mesh, model, opt_name,
                                         lr, mode, t_inner, comm, codec,
                                         mix_rounds, staleness, impl,
-                                        moment_codec, downlink_codec)
+                                        moment_codec, downlink_codec,
+                                        drop_rate, stall_rate, fault_seed)
     if impl != "auto":
         # same no-silent-fallback rule as optim.get: the pytree round has
         # no fused-kernel path for impl to select
@@ -241,7 +245,10 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
                                         staleness,
                                         moment_codec=moment_codec,
-                                        downlink_codec=downlink_codec)
+                                        downlink_codec=downlink_codec,
+                                        drop_rate=drop_rate,
+                                        stall_rate=stall_rate,
+                                        fault_seed=fault_seed)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -323,19 +330,25 @@ def _packed_impl(impl: str, mesh: Mesh, sexec) -> str:
 def _build_exchange(comm: str, codec: str, n_groups: int,
                     mix_rounds: int = 1, staleness: int = 1,
                     impl: str = "jnp", moment_codec: str = "fp32",
-                    downlink_codec: str = ""):
+                    downlink_codec: str = "", drop_rate: float = 0.0,
+                    stall_rate: float = 0.0, fault_seed: int = 0):
     """Exchange for a mesh step builder; ``impl`` selects the codec
     kernels and must already be resolved for the execution path
     (``_packed_impl`` — shard_map runs the Pallas quantize kernels on
     shard-local rows; the replicated fallback keeps the jnp reference).
-    ``moment_codec`` applies to every moment stream (DESIGN.md §10).
+    ``moment_codec`` applies to every moment stream (DESIGN.md §10);
+    drop_rate/stall_rate/fault_seed arm the deterministic FaultPlan
+    (DESIGN.md §12 — zero rates keep the exchange bit-exact fault-free).
     Returns (exchange, average_opt_state) — True on every topology since
     the per-stream staleness buffers landed."""
     exchange = comm_mod.get_exchange(comm, codec, n_groups, impl=impl,
                                      mix_rounds=mix_rounds,
                                      staleness=staleness,
                                      moment_codec=moment_codec,
-                                     downlink_codec=downlink_codec)
+                                     downlink_codec=downlink_codec,
+                                     drop_rate=drop_rate,
+                                     stall_rate=stall_rate,
+                                     fault_seed=fault_seed)
     return exchange, exchange.supports_opt_state_averaging
 
 
@@ -359,11 +372,22 @@ def _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
             return P(*(tuple(lead) + (None,) * (s.ndim - 1)))
         return P(*((None,) * s.ndim))
 
+    def _lead_offset(spec_tree):
+        # per-edge backlog buffers stack the stream's geometry under a
+        # small leading offset axis (len(push_sum_offsets),) — replicate
+        # that axis, keep the stream's own sharding behind it
+        return jax.tree.map(lambda s: P(*((None,) + tuple(s))), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
     def for_key(k, v):
         if k == "pushed":
             return param_specs
         if k == "pushed_opt":
             return {name: param_specs for name in v}
+        if k == "backlog":
+            return {name: _lead_offset(param_specs) for name in v}
+        if k == "backlog_w":
+            return P(*((None,) + tuple(lead)))
         if k == "codec":
             # per-stream codec state: error-feedback residuals mirror the
             # stream's geometry and must shard like the params (the
@@ -395,7 +419,10 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                              staleness: int = 1,
                              impl: str = "auto",
                              moment_codec: str = "fp32",
-                             downlink_codec: str = "") -> BuiltStep:
+                             downlink_codec: str = "",
+                             drop_rate: float = 0.0,
+                             stall_rate: float = 0.0,
+                             fault_seed: int = 0) -> BuiltStep:
     """Flat-buffer train step (DESIGN.md §6/§9): one (G, Np) f32 buffer
     per state part, donated so XLA updates the model in place across the
     T-step round. When the mesh has an in-group axis ("model"/"fsdp" > 1)
@@ -437,7 +464,10 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     exchange, avg_opt = _build_exchange(comm, codec, G, mix_rounds,
                                         staleness, impl=impl,
                                         moment_codec=moment_codec,
-                                        downlink_codec=downlink_codec)
+                                        downlink_codec=downlink_codec,
+                                        drop_rate=drop_rate,
+                                        stall_rate=stall_rate,
+                                        fault_seed=fault_seed)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)

@@ -78,8 +78,10 @@ def main() -> None:
                          "count=N)")
     ap.add_argument("--comm", default="server",
                     choices=["server", "ring", "gossip", "async_stale",
-                             "none"],
-                    help="exchange topology (repro.comm, DESIGN.md §8)")
+                             "push_sum", "none"],
+                    help="exchange topology (repro.comm, DESIGN.md §8; "
+                         "push_sum is loss-tolerant ratio consensus, "
+                         "DESIGN.md §12)")
     ap.add_argument("--codec", default="fp32",
                     choices=["fp32", "fp16", "bf16", "int8", "topk"],
                     help="wire codec for the model exchange; int8/topk "
@@ -105,6 +107,17 @@ def main() -> None:
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
                     help="bounded staleness s (async_stale)")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="deterministic fault injection (DESIGN.md §12): "
+                         "per-edge packet-drop probability in [0, 1); "
+                         "0 keeps the exchange bit-exact fault-free")
+    ap.add_argument("--stall-rate", type=float, default=0.0,
+                    help="per-round node stall probability in [0, 1) "
+                         "(a stalled node skips the exchange entirely)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the FaultPlan mask stream — faults are "
+                         "a pure function of (round, seed), so reruns and "
+                         "checkpoint resumes replay the same faults")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default="")
@@ -113,10 +126,11 @@ def main() -> None:
     if args.mode == "sync" and (args.comm != "server"
                                 or args.codec != "fp32"
                                 or args.moment_codec != "fp32"
-                                or args.downlink_codec):
-        ap.error("--comm/--codec select the local-SGD model exchange; "
-                 "sync-DP all-reduces gradients every step and has no "
-                 "exchange to configure")
+                                or args.downlink_codec
+                                or args.drop_rate or args.stall_rate):
+        ap.error("--comm/--codec/--drop-rate select the local-SGD model "
+                 "exchange; sync-DP all-reduces gradients every step and "
+                 "has no exchange to configure")
     if args.impl != "auto" and not args.packed:
         ap.error("--impl selects the packed fused kernels; add --packed")
     if args.shard > 1 and not (args.packed and args.mode == "localsgd"):
@@ -188,7 +202,9 @@ def main() -> None:
             staleness=args.staleness,
             impl=args.impl if args.packed else "auto",
             moment_codec=args.moment_codec,
-            downlink_codec=args.downlink_codec)
+            downlink_codec=args.downlink_codec,
+            drop_rate=args.drop_rate, stall_rate=args.stall_rate,
+            fault_seed=args.fault_seed)
         # every topology averages opt state now that the per-stream
         # staleness buffers exist (DESIGN.md §10)
         avg_opt = exchange.supports_opt_state_averaging
@@ -217,7 +233,12 @@ def main() -> None:
                                   and x.shape[-1] == layout.padded)
                     else rep_sh), state)
         batches = pipe.batches((G, args.per_group))
-        ctl = AdaptiveT(r=args.cost_ratio) if args.adaptive_t else None
+        # on a lossy network each useful round costs a full attempt's
+        # worth of link time (AdaptiveT.from_exchange's delivery_rate
+        # repricing): comm is 1/delivery more expensive, so r shrinks
+        # and the controller pushes T* up — fewer, longer rounds
+        ctl = (AdaptiveT(r=args.cost_ratio * exchange.delivery_rate)
+               if args.adaptive_t else None)
         t_cur = args.t_inner
         wire_total = 0
         for n in range(args.rounds):
@@ -238,11 +259,13 @@ def main() -> None:
                 t_cur = ctl.update(np.asarray(m["grad_sq_traj"])[0])
             wire_total += int(m["wire_bytes"])
             if n % args.log_every == 0:
+                part = (f"part {float(m['participation']):.2f} "
+                        if "participation" in m else "")
                 print(f"round {n:4d} loss {float(jnp.mean(m['loss'])):.4f} "
                       f"gsq {float(jnp.mean(m['grad_sq'])):.3e} "
                       f"T {int(jnp.max(m['inner_steps']))} "
                       f"wire {int(m['wire_bytes']):,}B "
-                      f"({time.time() - t0:.2f}s)")
+                      f"{part}({time.time() - t0:.2f}s)")
         print(f"comm {exchange.name}: {wire_total:,} wire bytes over "
               f"{args.rounds} rounds")
         final = lsgd.server_params(state, layout=layout)

@@ -214,17 +214,32 @@ class ShardExec:
         result BIT-EXACT vs the all_gather hop.
 
         ``hop_impl="allgather"``: the dense O(G·shard) hop (parity and
-        benchmark reference)."""
+        benchmark reference).
+
+        With ``mrow``/``act_s`` set (an active FaultPlan, DESIGN.md §12)
+        the hop is MASKED: this group's W row is gated by its
+        ``matrix_mask`` row, the lost weight substitutes the receiver's
+        own value (``deficit`` term — rows stay stochastic), and a
+        stalled receiver keeps its block — the same arithmetic as the
+        replicated ``_masked_hop_leaf``."""
         if w_np is None:
             return None
         w = jnp.asarray(w_np, jnp.float32)
         G = self.n_groups
 
-        if self.hop_impl == "allgather":
-            def hop(y):
-                full = jax.lax.all_gather(y, gax, axis=0, tiled=True)
-                row = jnp.take(w, self._gidx(), axis=0)         # (G,)
+        def contract(y, full, gidx, mrow, act_s):
+            row = jnp.take(w, gidx, axis=0)                     # (G,)
+            if mrow is None:
                 return jnp.tensordot(row, full, axes=[[0], [0]])[None]
+            rm = row * mrow
+            out = jnp.tensordot(rm, full, axes=[[0], [0]])[None]
+            out = out + (1.0 - jnp.sum(rm)) * y
+            return jnp.where(act_s > 0, out, y)
+
+        if self.hop_impl == "allgather":
+            def hop(y, mrow=None, act_s=None):
+                full = jax.lax.all_gather(y, gax, axis=0, tiled=True)
+                return contract(y, full, self._gidx(), mrow, act_s)
 
             return hop
         if self.hop_impl != "ppermute":
@@ -232,7 +247,7 @@ class ShardExec:
                              "(have 'ppermute', 'allgather')")
         offs = topo_mod.neighbor_offsets(w_np)
 
-        def hop(y):
+        def hop(y, mrow=None, act_s=None):
             gidx = self._gidx()
             full = jnp.zeros((G,) + y.shape[1:], y.dtype)
             full = jax.lax.dynamic_update_slice(full, y, (gidx, 0))
@@ -243,8 +258,7 @@ class ShardExec:
                 recv = jax.lax.ppermute(y, gax, perm)
                 full = jax.lax.dynamic_update_slice(
                     full, recv, ((gidx + d) % G, 0))
-            row = jnp.take(w, gidx, axis=0)                     # (G,)
-            return jnp.tensordot(row, full, axes=[[0], [0]])[None]
+            return contract(y, full, gidx, mrow, act_s)
 
         return hop
 
@@ -311,7 +325,16 @@ class ShardExec:
 
         Returns ``fn(xs, xs0, comm_state) -> (mixed, new_comm_state)``
         over ``{stream: (G, Np) buffer}`` dicts.
+
+        Fault injection (DESIGN.md §12): an active ``exch.fault_plan``
+        generates its delivery/liveness masks OUTSIDE the shard_map
+        block at full (G,)/(G, G) shape — the same pattern as the int8
+        rounding noise — so the sharded round consumes IDENTICAL masks
+        to the replicated path; push_sum dispatches to its own
+        ratio-consensus block (``_push_sum_fn``).
         """
+        if exch.topology == "push_sum":
+            return self._push_sum_fn(exch, layout)
         for c in (exch.codec, exch.mcodec):
             if not (c.shardable or c.identity):
                 raise NotImplementedError(
@@ -339,6 +362,12 @@ class ShardExec:
         G = self.n_groups
         shard_size = layout.shard_size
         dummy_spec = P(None, None)
+        plan = exch.fault_plan
+        faulty = plan is not None and exch.topology != "none"
+        # faulty server keeps the async-style per-stream staleness
+        # buffers: a dropped push contributes its last delivered model
+        buffered = (exch.topology == "async_stale"
+                    or (faulty and exch.topology == "server"))
 
         def is_lossy(codec):
             return (not codec.identity) and exch.topology != "none"
@@ -376,7 +405,9 @@ class ShardExec:
                 d_hat, res = self._topk_select(c, tau)
                 return ref + d_hat, res
 
-            def local(xs_t, x0s_t, us_t, res_t, pushed_t, rnd):
+            def local(xs_t, x0s_t, us_t, res_t, pushed_t, fm_t, rnd):
+                # fm_t: fault-mask blocks — ring/gossip (mmasks, act),
+                # server/async (deliver,), else a dummy (see fn below)
                 outs, new_res, new_pushed = [], [], []
                 for i, k in enumerate(names):
                     codec, x, x0 = codecs[k], xs_t[i], x0s_t[i]
@@ -392,7 +423,11 @@ class ShardExec:
                                     codec, y, ref,
                                     us_t[i][h] if chunked[k] else None)
                                 ref = y
-                            y = hop(y)
+                            if faulty:
+                                y = hop(y, mrow=fm_t[0][h, 0],
+                                        act_s=fm_t[1][0])
+                            else:
+                                y = hop(y)
                         outs.append(y)
                         new_res.append(res)
                         new_pushed.append(pushed_t[i])
@@ -405,10 +440,24 @@ class ShardExec:
                                            else None)
                     else:
                         y = x
-                    new_res.append(res)
                     if exch.topology == "async_stale":
                         keep = ((self._gidx() + rnd)
                                 % (exch.staleness + 1)) == 0
+                    else:
+                        keep = jnp.asarray(True)
+                    if faulty and buffered:
+                        arrived = fm_t[0][0] > 0
+                        if selective[k]:
+                            # EF deferral (DESIGN.md §12): a scheduled
+                            # push that DROPPED re-offers its shipped
+                            # entries (d_hat == y - x0) next round
+                            res = jnp.where(
+                                jnp.logical_and(keep,
+                                                jnp.logical_not(arrived)),
+                                res + (y - x0), res)
+                        keep = jnp.logical_and(keep, arrived)
+                    new_res.append(res)
+                    if buffered:
                         p = jnp.where(keep, y, pushed_t[i])
                         new_pushed.append(p)
                         outs.append(jax.lax.pmean(p, gax))
@@ -445,10 +494,9 @@ class ShardExec:
                 # the stream it carries (DESIGN.md §11)
                 res.append(comm_state["codec"][k]["residual"])
                 res_specs.append(spec)
-            stale = exch.topology == "async_stale"
             pushed, pushed_specs = [], []
             for k in names:
-                if not stale:
+                if not buffered:
                     pushed.append(dummy)
                     pushed_specs.append(dummy_spec)
                     continue
@@ -456,27 +504,41 @@ class ShardExec:
                               else comm_state["pushed_opt"][k])
                 pushed_specs.append(spec)
             rnd = comm_state.get("round", jnp.zeros((), jnp.int32))
+            # fault masks, generated OUTSIDE the block at full shape
+            # (DESIGN.md §12) — the exact arrays the replicated path uses
+            if faulty and exch.w is not None:
+                fm = (jnp.stack([plan.matrix_mask(rnd, h, G)
+                                 for h in range(hops)]),
+                      plan.active_mask(rnd, G))
+                fm_specs = (P(None, self._entry(self.group_axes), None),
+                            self.group_spec())
+            elif faulty:
+                fm = (plan.push_mask(rnd, G),)
+                fm_specs = (self.group_spec(),)
+            else:
+                fm = (dummy,)
+                fm_specs = (dummy_spec,)
             x0s = tuple(xs0.get(k, xs[k]) for k in names)  # dummy when
             # the stream is not lossy (never read inside the block)
             f = shard_map(local, mesh=self.mesh,
                           in_specs=((spec,) * len(names),
                                     (spec,) * len(names),
                                     tuple(us_specs), tuple(res_specs),
-                                    tuple(pushed_specs), P()),
+                                    tuple(pushed_specs), fm_specs, P()),
                           out_specs=((spec,) * len(names),
                                      tuple(res_specs),
                                      tuple(pushed_specs)),
                           check_rep=False)
             mixed_t, new_res, new_pushed = f(
                 tuple(xs[k] for k in names), x0s, tuple(us), tuple(res),
-                tuple(pushed), rnd)
+                tuple(pushed), fm, rnd)
             mixed = dict(zip(names, mixed_t))
             for i, k in enumerate(names):
                 if selective[k]:
                     cstates[k] = {"residual": new_res[i]}
             if any(chunked.values()) or any(selective.values()):
                 new_state["codec"] = cstates
-            if stale:
+            if buffered:
                 new_state["pushed"] = new_pushed[names.index("params")]
                 mnames = [k for k in names if k != "params"]
                 if mnames:
@@ -484,8 +546,142 @@ class ShardExec:
                     for k in mnames:
                         po[k] = new_pushed[names.index(k)]
                     new_state["pushed_opt"] = po
+            if buffered or (faulty and exch.w is not None):
                 new_state["round"] = rnd + 1
+            if faulty:
+                if exch.w is not None:
+                    new_state["participation"] = \
+                        exch._edge_participation(rnd)
+                else:
+                    deliver = fm[0]
+                    if exch.topology == "async_stale":
+                        sched = (jnp.arange(G) + rnd) \
+                            % (exch.staleness + 1) == 0
+                    else:
+                        sched = jnp.ones((G,), bool)
+                    n_sched = jnp.maximum(
+                        jnp.sum(sched.astype(jnp.float32)), 1.0)
+                    new_state["participation"] = (
+                        jnp.sum(jnp.where(sched, deliver, 0.0)) / n_sched)
             return mixed, new_state
+
+        return fn
+
+    def _push_sum_fn(self, exch, layout: packing.Layout):
+        """shard_map'd push-sum ratio consensus (DESIGN.md §12),
+        semantics-matched to ``Exchange._push_sum_streams``: each group's
+        (1, shard) block ships its equal share per circulant offset via
+        ``ppermute`` (the same point-to-point transport as the ring
+        hops), per-directed-edge backlog buffers shard like the params,
+        and the scalar weight channel rides the group axis. The fault
+        masks and liveness vector are generated OUTSIDE the block at
+        full (G,) shape — identical arrays to the replicated path — so
+        sharded and replicated rounds agree to fp32 tolerance (the
+        arithmetic is elementwise + one ppermute per offset, in the
+        same order)."""
+        for c in (exch.codec, exch.mcodec):
+            if not (c.identity or c.name in ("fp16", "bf16")):
+                raise NotImplementedError(
+                    f"push_sum + {c.name}: the push-sum wire carries "
+                    "cumulative mass, not round deltas (DESIGN.md §12); "
+                    "valid push_sum codecs: 'fp32', 'fp16', 'bf16'")
+        self.check_layout(layout)
+        G = self.n_groups
+        offs = topo_mod.push_sum_offsets(G)
+        hops = exch.mix_rounds
+        plan = exch.fault_plan
+        a = 1.0 / (len(offs) + 1.0)
+        spec = self.buf_spec()
+        gax = self._entry(self.group_axes)
+        gspec = self.group_spec()
+        gentry = self._entry(self.group_axes)
+
+        def fn(xs, xs0, comm_state):
+            del xs0
+            names = tuple(xs)
+            new_state = dict(comm_state)
+            rnd = comm_state["round"]
+            if not offs:                           # G == 1: no wire
+                new_state["round"] = rnd + 1
+                return dict(xs), new_state
+            act = (plan.active_mask(rnd, G) if plan is not None
+                   else jnp.ones((G,), jnp.float32))
+            incs = jnp.stack([jnp.roll(act, d) for d in offs])
+            # delivery = Bernoulli edge drop x sender liveness x receiver
+            # liveness — the same product the replicated path consumes
+            masks = jnp.stack(
+                [jnp.stack([(plan.edge_mask(rnd, h, di, G)
+                             if plan is not None
+                             else jnp.ones((G,), jnp.float32))
+                            * incs[di] * act
+                            for di, _ in enumerate(offs)])
+                 for h in range(hops)])            # (hops, n_offs, G)
+
+            def local(xs_t, bl_t, w, blw, act_l, incs_l, masks_l):
+                # shapes: x (1, shard), bl (n_offs, 1, shard), w (1,),
+                # blw (n_offs, 1), act_l (1,), incs_l (n_offs, 1),
+                # masks_l (hops, n_offs, 1)
+                nums = [x.astype(jnp.float32) * w for x in xs_t]
+                bls = list(bl_t)
+                for h in range(hops):
+                    new_w = jnp.where(act_l > 0, a * w, w)
+                    nblw = []
+                    for di, d in enumerate(offs):
+                        perm = [(src, (src + d) % G) for src in range(G)]
+                        recv = jax.lax.ppermute(a * w, gax, perm)
+                        b = blw[di] + incs_l[di] * recv
+                        m = masks_l[h, di]
+                        new_w = new_w + m * b
+                        nblw.append(b - m * b)
+                    for i, k in enumerate(names):
+                        codec = exch.stream_codec(k)
+                        x = nums[i]
+                        y = jnp.where(act_l > 0, a * x, x)
+                        nb = []
+                        for di, d in enumerate(offs):
+                            perm = [(src, (src + d) % G)
+                                    for src in range(G)]
+                            recv = jax.lax.ppermute(a * x, gax, perm)
+                            b = bls[i][di] + incs_l[di] * recv
+                            t = b if codec.identity \
+                                else codec.compress(b, {})[0]
+                            m = masks_l[h, di]
+                            y = y + m * t
+                            nb.append(b - m * t)
+                        nums[i] = y
+                        bls[i] = jnp.stack(nb)
+                    w = new_w
+                    blw = jnp.stack(nblw)
+                outs = tuple((nums[i] / w[..., None])
+                             .astype(xs_t[i].dtype)
+                             for i in range(len(names)))
+                return outs, tuple(bls), w, blw
+
+            bl_spec = P(None, gentry, self._entry(self.shard_axes))
+            blw_spec = P(None, gentry)
+            f = shard_map(local, mesh=self.mesh,
+                          in_specs=((spec,) * len(names),
+                                    (bl_spec,) * len(names),
+                                    gspec, blw_spec, gspec,
+                                    P(None, gentry),
+                                    P(None, None, gentry)),
+                          out_specs=((spec,) * len(names),
+                                     (bl_spec,) * len(names),
+                                     gspec, blw_spec),
+                          check_rep=False)
+            mixed_t, new_bl, new_mass, new_blw = f(
+                tuple(xs[k] for k in names),
+                tuple(comm_state["backlog"][k] for k in names),
+                comm_state["mass"], comm_state["backlog_w"],
+                act, incs, masks)
+            backlog = dict(comm_state["backlog"])
+            backlog.update(dict(zip(names, new_bl)))
+            new_state["mass"] = new_mass
+            new_state["backlog"] = backlog
+            new_state["backlog_w"] = new_blw
+            new_state["round"] = rnd + 1
+            new_state["participation"] = jnp.mean(masks)
+            return dict(zip(names, mixed_t)), new_state
 
         return fn
 
