@@ -2,11 +2,11 @@
 import json
 import os
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+from repro import obs  # noqa: E402
 from repro.core.reference import rounds_to, run_alg1  # noqa: F401,E402
 
 OUT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
@@ -31,15 +31,24 @@ def child_env(force_devices: int = 0) -> dict:
 
 def save_result(name: str, payload: dict) -> Path:
     OUT_DIR.mkdir(parents=True, exist_ok=True)
+    # stamp the telemetry schema so BENCH_*.json artifacts and --trace
+    # files declare the same contract version (DESIGN.md §13)
+    payload.setdefault("obs_schema", obs.SCHEMA_VERSION)
     p = OUT_DIR / f"{name}.json"
     p.write_text(json.dumps(payload, indent=1, default=float))
     return p
 
 
-class Timer:
-    def __enter__(self):
-        self.t0 = time.time()
-        return self
+def bench_trace(name: str, meta: dict = None) -> obs.Trace:
+    """A structured JSONL sink next to the bench artifact
+    (experiments/bench/<name>.trace.jsonl), sharing the --trace schema."""
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    return obs.Trace(str(OUT_DIR / f"{name}.trace.jsonl"),
+                     meta={"bench": name, **(meta or {})})
 
-    def __exit__(self, *a):
-        self.seconds = time.time() - self.t0
+
+class Timer(obs.PhaseTimer):
+    """Fenced wall-clock timer (DESIGN.md §13): ``t.fence(x)`` registers
+    jax values the timed region produced, ``__exit__`` blocks until they
+    are ready before reading the clock. Back-compat with the old naive
+    timer — ``with Timer() as t: ...`` then ``t.seconds``."""

@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import save_result
+from benchmarks.common import bench_trace, save_result
 from repro import optim
 from repro.configs.base import get_config
 from repro.core import localsgd as lsgd
@@ -260,6 +260,61 @@ def _run_sharded_subprocess(reps: int) -> dict:
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+def _trace_overhead_row(reps: int, bar: float) -> dict:
+    """Trace overhead (ISSUE 7 acceptance): the packed T=16 sgd headline
+    round run two ways, interleaved —
+
+      bare    fenced timing only (block_until_ready, no sink)
+      traced  the full obs.Trace path every round: TraceAnnotation'd
+              phase, fence, emit_round to a real JSONL sink
+
+    throughput_ratio = bare_round_s / traced_round_s (1.0 == free). The
+    bar gates via run.py --check: tracing must keep ≥ 95% of headline
+    round throughput (85% in smoke — 3-rep medians on a noisy 2-core
+    container)."""
+    cfg = get_config("paper-lenet").reduced()
+    params = _params_for(cfg)
+    layout = packing.layout_of(params)
+    t_inner = 16
+    batch = {"c": jnp.linspace(0.0, 1.0, G)}
+    lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner)
+    opt = optim.get("sgd", 0.05, packed=True)
+    rnd = jax.jit(lsgd.make_local_round(probe_loss, opt, lcfg,
+                                        layout=layout), donate_argnums=(0,))
+    tr = bench_trace("trace_overhead",
+                     meta={"config": cfg.name, "T": t_inner, "opt": "sgd"})
+
+    class _TracedRunner(_Runner):
+        n = 0
+
+        def run_block(self, reps):
+            for _ in range(reps):
+                t0 = time.time()
+                with tr.phase("round") as f:
+                    self.state, m = f(self.fn(self.state, self.batch))
+                tr.emit_round(_TracedRunner.n, m)
+                _TracedRunner.n += 1
+                self.times.append(time.time() - t0)
+
+    runners = {}
+    for tag, klass in (("bare", _Runner), ("traced", _TracedRunner)):
+        state = lsgd.init_state(params, opt, n_groups=G, layout=layout)
+        runners[tag] = klass(rnd, state, batch)
+    block = max(2, reps // 3)
+    done = 0
+    while done < reps:
+        for r in runners.values():
+            r.run_block(min(block, reps - done))
+        done += block
+    tr.close()
+    bare_s = runners["bare"].median_s()
+    traced_s = runners["traced"].median_s()
+    return {"config": cfg.name, "T": t_inner, "opt": "sgd",
+            "bare_round_s": bare_s, "traced_round_s": traced_s,
+            "trace_records": tr.n_records,
+            "throughput_ratio": bare_s / traced_s, "bar": bar}
+
+
 def _real_model_row(reps):
     """Supplementary: the same comparison with the REAL transformer loss
     (fwd/bwd dominates on CPU; expect ~1x — reported for honesty)."""
@@ -343,6 +398,19 @@ def main() -> dict:
           f"{s['sharded']['steps_per_s']:.1f} st/s "
           f"({s['speedup_sharded_vs_replicated']:.2f}x; state/device "
           f"1/{s['per_device_state_reduction']:.0f})", flush=True)
+    # trace overhead on the same headline cell (ISSUE 7 acceptance:
+    # per-round telemetry must keep >= 95% of bare round throughput)
+    trow = _trace_overhead_row(reps, bar=0.85 if smoke else 0.95)
+    payload["trace_overhead"] = trow
+    payload["headline_trace"] = {
+        "config": trow["config"], "T": trow["T"], "opt": trow["opt"],
+        "throughput_ratio": trow["throughput_ratio"], "bar": trow["bar"]}
+    payload["pass"] = bool(payload["pass"]
+                           and trow["throughput_ratio"] >= trow["bar"])
+    print(f"  trace overhead T={trow['T']} {trow['opt']}: bare "
+          f"{trow['bare_round_s']*1e3:.1f}ms, traced "
+          f"{trow['traced_round_s']*1e3:.1f}ms (throughput ratio "
+          f"{trow['throughput_ratio']:.3f}, bar {trow['bar']})", flush=True)
     save_result(artifact, payload)
     if not smoke:
         # the committed perf-trajectory artifact — full runs only, so CI

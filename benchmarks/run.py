@@ -54,7 +54,8 @@ BENCHES = [
                f"no-avg={r['final_without']:.3f}"),
     ("round_throughput", round_throughput.main,
      lambda r: f"packed vs pytree headline="
-               f"{r['headline']['speedup']:.2f}x (bar 1.5x)"),
+               f"{r['headline']['speedup']:.2f}x (bar 1.5x) trace_ratio="
+               f"{r['headline_trace']['throughput_ratio']:.2f}"),
     ("comm_bytes", comm_bytes.main,
      lambda r: f"int8 wire reduction="
                f"{r['headline']['int8_reduction_vs_fp32']:.2f}x (bar 3.5x)"
@@ -77,6 +78,9 @@ BENCHES = [
 HEADLINE_BARS = {
     "BENCH_round_throughput.json": [
         ("headline", "speedup", "bar"),
+        # per-round telemetry must be ~free (ISSUE 7): tracing keeps
+        # >= 95% of the bare headline round throughput
+        ("headline_trace", "throughput_ratio", "bar"),
     ],
     "BENCH_comm_bytes.json": [
         ("headline", "int8_reduction_vs_fp32", "bar"),
@@ -159,22 +163,33 @@ def check() -> int:
 def main() -> None:
     if "--check" in sys.argv:
         sys.exit(1 if check() else 0)
+    from benchmarks.common import bench_trace
+
     print("name,seconds,derived")
     failures = []
+    # every bench cell lands in the shared JSONL sink too, so the driver
+    # and --trace runs report through one schema (DESIGN.md §13)
+    tr = bench_trace("run")
     for name, fn, fmt in BENCHES:
         t0 = time.time()
         try:
-            r = fn()
-            dt = time.time() - t0
+            with tr.phase(name):
+                r = fn()
+            dt = tr.take_phases().get(name, time.time() - t0)
             status = "PASS" if r.get("pass") else "CHECK"
+            tr.emit("bench", name=name, seconds=round(dt, 3),
+                    status=status)
             print(f"{name},{dt:.1f},{status} {fmt(r)}", flush=True)
             if not r.get("pass"):
                 failures.append(name)
         except Exception as e:  # pragma: no cover
             dt = time.time() - t0
+            tr.emit("bench", name=name, seconds=round(dt, 3),
+                    status="ERROR")
             print(f"{name},{dt:.1f},ERROR {type(e).__name__}: {e}",
                   flush=True)
             failures.append(name)
+    tr.close()
     if failures:
         print(f"# {len(failures)} benchmark(s) flagged: {failures}")
         sys.exit(1)

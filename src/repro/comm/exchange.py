@@ -481,8 +481,9 @@ class Exchange:
                     cstates[name] = cs
                     touched = True
                 continue
-            delta = jax.tree.map(lambda a, b: a - b, x, xs0[name])
-            d_hat, cs = codec.compress(delta, cstates.get(name, {}))
+            with jax.named_scope("encode"):
+                delta = jax.tree.map(lambda a, b: a - b, x, xs0[name])
+                d_hat, cs = codec.compress(delta, cstates.get(name, {}))
             x_hat[name] = jax.tree.map(lambda b, d: b + d, xs0[name], d_hat)
             d_hats[name] = d_hat
             if codec.stateful:
@@ -502,7 +503,8 @@ class Exchange:
                 self.topology == "server" and plan is not None):
             if touched:
                 new_state["codec"] = cstates
-            mixed.update({k: self.mix(v) for k, v in x_hat.items()})
+            with jax.named_scope("mix"):
+                mixed.update({k: self.mix(v) for k, v in x_hat.items()})
             return self._apply_downlink(mixed, comm_state, new_state)
         # bounded-staleness server: refresh only the groups whose push
         # ARRIVED this round (the staleness schedule for async_stale,
@@ -676,18 +678,22 @@ class Exchange:
             return mixed, new_state
         down = dict(comm_state["down"])
         out = {}
-        for name, m in mixed.items():
-            st = down[name]
-            # ONE encode of the (row-identical) broadcast: every receiver
-            # decodes the same bits, so the delta is compressed on a
-            # single G-row and the decoded payload broadcast back
-            delta = jax.tree.map(lambda a, b: (a - b)[:1], m, st["ref"])
-            d_hat, cs = self.downlink_codec.compress(delta, st["state"])
-            m_hat = jax.tree.map(
-                lambda b, d: b + jnp.broadcast_to(d, b.shape),
-                st["ref"], d_hat)
-            out[name] = m_hat
-            down[name] = {"ref": m_hat, "state": cs}
+        with jax.named_scope("decode"):
+            for name, m in mixed.items():
+                st = down[name]
+                # ONE encode of the (row-identical) broadcast: every
+                # receiver decodes the same bits, so the delta is
+                # compressed on a single G-row and the decoded payload
+                # broadcast back
+                delta = jax.tree.map(lambda a, b: (a - b)[:1], m,
+                                     st["ref"])
+                d_hat, cs = self.downlink_codec.compress(delta,
+                                                         st["state"])
+                m_hat = jax.tree.map(
+                    lambda b, d: b + jnp.broadcast_to(d, b.shape),
+                    st["ref"], d_hat)
+                out[name] = m_hat
+                down[name] = {"ref": m_hat, "state": cs}
         new_state["down"] = down
         return out, new_state
 

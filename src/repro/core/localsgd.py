@@ -202,6 +202,71 @@ def _grad_sq_norm_groups(grads_G, use_pallas: bool = False) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Uniform round observability block (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def _consensus_sq_flat(x_G, use_pallas: bool = False) -> jax.Array:
+    """Per-group consensus distance ||x_g - x̄||² of a (G, N) buffer ->
+    (G,): the pad region is zero in every group, so it contributes
+    nothing. The deviation is formed in fp32 and reduced by the same
+    sq_norm path the grad metrics use."""
+    x32 = x_G.astype(jnp.float32)
+    d = x32 - jnp.mean(x32, axis=0, keepdims=True)
+    return _grad_sq_norm_groups(d, use_pallas)
+
+
+def _consensus_sq_tree(params_G) -> jax.Array:
+    """Per-group ||x_g - x̄||² summed over every pytree leaf -> (G,)."""
+    total = None
+    for leaf in jax.tree.leaves(params_G):
+        x = leaf.astype(jnp.float32)
+        d = x - jnp.mean(x, axis=0, keepdims=True)
+        part = jnp.sum(jnp.square(d), axis=tuple(range(1, d.ndim)))
+        total = part if total is None else total + part
+    return total
+
+
+def _residual_sq_groups(res, n_groups: int) -> jax.Array:
+    """Per-group squared mass of a codec's error-feedback residual ->
+    (G,); zeros when the stream's codec carries none (width codecs,
+    identity) so the codec_err/<stream> key is always present."""
+    if res is None:
+        return jnp.zeros((n_groups,), jnp.float32)
+    total = None
+    for leaf in jax.tree.leaves(res):
+        x = leaf.astype(jnp.float32)
+        part = jnp.sum(jnp.square(x), axis=tuple(range(1, x.ndim)))
+        total = part if total is None else total + part
+    return total
+
+
+def _obs_round_metrics(exch, comm_state: dict, streams, consensus_pre,
+                       consensus_post, n_groups: int) -> dict:
+    """The uniform observability block every round emits (DESIGN.md
+    §13): consensus distance pre/post exchange, per-stream codec error
+    mass, push-sum backlog mass, participation and the static expected
+    delivery rate — ALWAYS present, zeros/ones on configurations where
+    the quantity is trivially inert, so the metric schema never depends
+    on topology/codec/fault flags."""
+    m = {"consensus_sq": consensus_pre,
+         "consensus_sq_post": consensus_post}
+    cstates = comm_state.get("codec", {})
+    for s in streams:
+        m[f"codec_err/{s}"] = _residual_sq_groups(
+            cstates.get(s, {}).get("residual"), n_groups)
+    m["backlog_mass"] = (jnp.sum(comm_state["backlog_w"])
+                         if "backlog_w" in comm_state
+                         else jnp.zeros((), jnp.float32))
+    part = comm_state.get("participation")
+    m["participation"] = (jnp.asarray(part, jnp.float32)
+                          if part is not None
+                          else jnp.ones((), jnp.float32))
+    m["delivery_rate"] = jnp.asarray(exch.delivery_rate, jnp.float32)
+    return m
+
+
+# ---------------------------------------------------------------------------
 # Local round = T local steps (vmapped over groups) + one averaging step
 # ---------------------------------------------------------------------------
 
@@ -326,9 +391,12 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
             assert len(cfg.t_i) == cfg.n_groups, cfg.t_i
             assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
             t_vec = jnp.asarray(cfg.t_i, jnp.int32)
-            st, metrics = jax.vmap(fixed_batch_group)(st, batch_G, t_vec)
+            with jax.named_scope("local_steps"):
+                st, metrics = jax.vmap(fixed_batch_group)(st, batch_G,
+                                                          t_vec)
         else:
-            st, metrics = jax.vmap(group_fn)(st, batch_G)
+            with jax.named_scope("local_steps"):
+                st, metrics = jax.vmap(group_fn)(st, batch_G)
         # ---- communication: the multi-stream exchange (DESIGN.md §10) ----
         # params plus (when averaging opt state) one stream per moment
         # buffer, each through its own codec; the step counter is never
@@ -337,16 +405,18 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
         # per-group counts are meaningful
         xs = {"params": st["params"]}
         xs.update({k: st["opt"][k] for k in mkeys})
-        mixed, comm_state = exch.streams(xs, xs0, comm_state)
+        with jax.named_scope("exchange"):
+            mixed, comm_state = exch.streams(xs, xs0, comm_state)
         mixed = _clamp_nonneg_streams(mixed, opt, exch)
         new_opt = {k: mixed.get(k, v) for k, v in st["opt"].items()}
         metrics.update(_round_wire_bytes(
             exch, st["params"], st["opt"], cfg.average_opt_state,
             cfg.n_groups))
-        if "participation" in comm_state:
-            # fraction of scheduled payloads that arrived this round
-            # (1.0 on a clean network — DESIGN.md §12)
-            metrics["participation"] = comm_state["participation"]
+        with jax.named_scope("round_metrics"):
+            metrics.update(_obs_round_metrics(
+                exch, comm_state, ("params",) + mkeys,
+                _consensus_sq_tree(st["params"]),
+                _consensus_sq_tree(mixed["params"]), cfg.n_groups))
         out = {"params": mixed["params"], "opt": new_opt}
         if "comm" in state_G:
             out["comm"] = comm_state
@@ -414,12 +484,16 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
         opt_step = shardexec.opt_step(opt)
         exch_streams = shardexec.exchange_streams(exch, layout)
         gsq_groups = shardexec.sq_norm_groups(use_pallas)
+        consensus_groups = shardexec.consensus_sq_groups(use_pallas)
     else:
         opt_step = (jax.vmap(opt.step) if per_group_count else opt.step)
         exch_streams = exch.streams
 
         def gsq_groups(g_G):
             return _grad_sq_norm_groups(g_G, use_pallas)
+
+        def consensus_groups(x_G):
+            return _consensus_sq_flat(x_G, use_pallas)
 
     if cfg.t_i is not None:
         assert len(cfg.t_i) == cfg.n_groups, cfg.t_i
@@ -482,13 +556,15 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
             # (G, T, ...) -> (T, G, ...) so scan feeds one microbatch/step
             batches_T = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1),
                                      batch_G)
-            state_G, ys = jax.lax.scan(
-                lambda s, xs: body(s, xs[0], xs[1]),
-                state_G, (ts, batches_T))
+            with jax.named_scope("local_steps"):
+                state_G, ys = jax.lax.scan(
+                    lambda s, xs: body(s, xs[0], xs[1]),
+                    state_G, (ts, batches_T))
             last_batch = jax.tree.map(lambda x: x[:, -1], batch_G)
         else:
-            state_G, ys = jax.lax.scan(
-                lambda s, t: body(s, t, batch_G), state_G, ts)
+            with jax.named_scope("local_steps"):
+                state_G, ys = jax.lax.scan(
+                    lambda s, t: body(s, t, batch_G), state_G, ts)
             last_batch = batch_G
 
         n_steps = (t_vec if t_vec is not None
@@ -513,8 +589,9 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
                 loss, g_tree = vg(packing.unpack(buf, layout), b)
                 return loss, grad_sq_norm(g_tree)
 
-            loss_G, gsq_G = jax.vmap(final_eval)(state_G["params"],
-                                                 last_batch)
+            with jax.named_scope("final_eval"):
+                loss_G, gsq_G = jax.vmap(final_eval)(state_G["params"],
+                                                     last_batch)
             metrics = {"loss": loss_G,
                        "inner_steps": n_steps,
                        "grad_sq": gsq_G}
@@ -523,16 +600,20 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
         # the step counter is never exchanged (map_moments convention)
         xs = {"params": state_G["params"]}
         xs.update({k: state_G["opt"][k] for k in mkeys})
-        mixed, comm_state = exch_streams(xs, xs0, comm_state)
+        with jax.named_scope("round_metrics"):
+            consensus_pre = consensus_groups(state_G["params"])
+        with jax.named_scope("exchange"):
+            mixed, comm_state = exch_streams(xs, xs0, comm_state)
         mixed = _clamp_nonneg_streams(mixed, opt, exch)
         new_opt = {k: mixed.get(k, v) for k, v in state_G["opt"].items()}
         metrics.update(_round_wire_bytes(
             exch, state_G["params"], state_G["opt"],
             cfg.average_opt_state, cfg.n_groups))
-        if "participation" in comm_state:
-            # fraction of scheduled payloads that arrived this round
-            # (1.0 on a clean network — DESIGN.md §12)
-            metrics["participation"] = comm_state["participation"]
+        with jax.named_scope("round_metrics"):
+            metrics.update(_obs_round_metrics(
+                exch, comm_state, ("params",) + tuple(mkeys),
+                consensus_pre, consensus_groups(mixed["params"]),
+                cfg.n_groups))
         out = {"params": mixed["params"], "opt": new_opt}
         if had_comm:
             out["comm"] = comm_state

@@ -73,11 +73,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             staleness: int = 1, impl: str = "auto",
             moment_codec: str = "fp32", downlink_codec: str = "",
             drop_rate: float = 0.0, stall_rate: float = 0.0,
-            fault_seed: int = 0) -> dict:
+            fault_seed: int = 0, trace: str = "") -> dict:
     import dataclasses as _dc
 
     import jax
 
+    from repro import obs
     from repro.configs.base import INPUT_SHAPES, get_config
     from repro.launch import hlo as hlomod
     from repro.launch.mesh import make_production_mesh
@@ -112,18 +113,24 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
         "n_devices": mesh.devices.size, "tag": tag, "meta": built.meta,
         "status": "started",
     }
+    # null sink when --trace is unset: phases still time through the
+    # same fenced path the launchers use (DESIGN.md §13)
+    tr = obs.Trace(trace or None, meta={
+        "arch": arch, "shape": shape_name, "mode": mode,
+        "packed": packed, "comm": comm, "codec": codec,
+        "mesh": list(mesh.devices.shape)})
     with mesh:
         jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
                          out_shardings=built.out_shardings,
                          donate_argnums=getattr(built, "donate_argnums",
                                                 ()))
-        t0 = time.time()
-        lowered = jitted.lower(*built.args)
-        t1 = time.time()
-        compiled = lowered.compile()
-        t2 = time.time()
-    rec["lower_s"] = round(t1 - t0, 2)
-    rec["compile_s"] = round(t2 - t1, 2)
+        with tr.phase("lower"):
+            lowered = jitted.lower(*built.args)
+        with tr.phase("compile"):
+            compiled = lowered.compile()
+    phases = tr.take_phases()
+    rec["lower_s"] = round(phases["lower"], 2)
+    rec["compile_s"] = round(phases["compile"], 2)
 
     try:
         mem = compiled.memory_analysis()
@@ -170,6 +177,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
         p.parent.mkdir(parents=True, exist_ok=True)
         p.with_suffix(".hlo.txt").write_text(txt)
     rec["status"] = "ok"
+    tr.emit("dryrun", arch=arch, shape=shape_name,
+            lower_s=rec["lower_s"], compile_s=rec["compile_s"],
+            hlo_chars=rec["hlo_chars"], collectives=rec["collectives"])
+    tr.close()
     return rec
 
 
@@ -278,9 +289,15 @@ def main() -> None:
                     choices=["rect", "tri"])
     ap.add_argument("--embed-impl", default="",
                     choices=["", "onehot", "gather"])
+    ap.add_argument("--trace", default="",
+                    help="append lower/compile phase records to this "
+                         "JSONL sink (single-run mode; --all subprocesses "
+                         "would clobber one file)")
     args = ap.parse_args()
     if args.impl != "auto" and not args.packed:
         ap.error("--impl selects the packed fused kernels; add --packed")
+    if args.trace and args.all:
+        ap.error("--trace is single-run only; --all runs subprocesses")
 
     if args.all:
         extra = []
@@ -329,7 +346,7 @@ def main() -> None:
                       downlink_codec=args.downlink_codec,
                       drop_rate=args.drop_rate,
                       stall_rate=args.stall_rate,
-                      fault_seed=args.fault_seed)
+                      fault_seed=args.fault_seed, trace=args.trace)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

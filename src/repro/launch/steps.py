@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import comm as comm_mod
+from repro import obs
 from repro import optim
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import localsgd as lsgd
@@ -301,7 +302,10 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "wire_bytes_down_per_round": exchange.wire_bytes_down(
              n_p, moment_sizes=moment_sizes),
          "wire_bytes_per_round_by_stream": exchange.wire_bytes_by_stream(
-             n_p, moment_sizes)})
+             n_p, moment_sizes),
+         "delivery_rate": exchange.delivery_rate,
+         "metrics_schema": list(obs.round_metric_keys(
+             ("params",) + tuple(moment_sizes)))})
 
 
 def _packed_impl(impl: str, mesh: Mesh, sexec) -> str:
@@ -514,7 +518,10 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "wire_bytes_down_per_round": exchange.wire_bytes_down(
              n_wire, moment_sizes=moment_sizes),
          "wire_bytes_per_round_by_stream": exchange.wire_bytes_by_stream(
-             n_wire, moment_sizes)},
+             n_wire, moment_sizes),
+         "delivery_rate": exchange.delivery_rate,
+         "metrics_schema": list(obs.round_metric_keys(
+             ("params",) + tuple(moment_sizes)))},
         donate_argnums=(0,))
 
 

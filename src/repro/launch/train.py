@@ -10,14 +10,13 @@ mesh (--mesh pod).
 from __future__ import annotations
 
 import argparse
-import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import comm as comm_mod
+from repro import obs
 from repro import optim
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import get_config
@@ -76,7 +75,7 @@ def main() -> None:
                          "(DESIGN.md §9; needs G*S devices, e.g. "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N)")
-    ap.add_argument("--comm", default="server",
+    ap.add_argument("--comm", "--topology", dest="comm", default="server",
                     choices=["server", "ring", "gossip", "async_stale",
                              "push_sum", "none"],
                     help="exchange topology (repro.comm, DESIGN.md §8; "
@@ -122,6 +121,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint", default="")
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--trace", default="",
+                    help="append phase-fenced JSONL round records here "
+                         "(DESIGN.md §13); summarize/validate with "
+                         "PYTHONPATH=src python -m repro.obs.report")
+    ap.add_argument("--profile", default="",
+                    help="dump a perfetto trace of the run under this "
+                         "directory (jax.profiler.start_trace)")
     args = ap.parse_args()
     if args.mode == "sync" and (args.comm != "server"
                                 or args.codec != "fp32"
@@ -144,6 +150,16 @@ def main() -> None:
     params = model.init(jax.random.PRNGKey(args.seed))
     n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M mode={args.mode}")
+
+    # one Trace regardless of --trace: the null sink still fences every
+    # phase with block_until_ready, so printed timings are honest even
+    # when nothing is written (DESIGN.md §13)
+    trace = obs.Trace(args.trace or None, meta={
+        "arch": cfg.name, "mode": args.mode, "groups": args.groups,
+        "t_inner": args.t_inner, "comm": args.comm, "codec": args.codec,
+        "rounds": args.rounds, "n_params": n_params,
+        "packed": bool(args.packed), "shard": args.shard,
+        "drop_rate": args.drop_rate, "stall_rate": args.stall_rate})
 
     layout = packing.layout_of(params) if args.packed else None
     G = args.groups
@@ -176,15 +192,19 @@ def main() -> None:
                        donate_argnums=(0,))
         state = lsgd.init_state(params, opt, layout=layout)
         batches = pipe.batches((G * args.per_group,))
-        for n in range(args.rounds):
-            batch = add_modalities(
-                {"tokens": jnp.asarray(next(batches)["tokens"])}, cfg, rng)
-            t0 = time.time()
-            state, m = step(state, batch)
-            if n % args.log_every == 0:
-                print(f"step {n:4d} loss {float(m['loss']):.4f} "
-                      f"gsq {float(m['grad_sq']):.3e} "
-                      f"({time.time() - t0:.2f}s)")
+        with obs.profile_span(args.profile):
+            for n in range(args.rounds):
+                with trace.phase("data"):
+                    batch = add_modalities(
+                        {"tokens": jnp.asarray(next(batches)["tokens"])},
+                        cfg, rng)
+                with trace.phase("step") as f:
+                    state, m = f(step(state, batch))
+                rec = trace.emit_round(n, m, kind="step")
+                if n % args.log_every == 0:
+                    print(f"step {n:4d} loss {float(m['loss']):.4f} "
+                          f"gsq {float(m['grad_sq']):.3e} "
+                          f"({rec['phase_s'].get('step', 0.0):.2f}s)")
         final = (packing.unpack(state["params"], layout)
                  if args.packed else state["params"])
     else:
@@ -241,40 +261,52 @@ def main() -> None:
                if args.adaptive_t else None)
         t_cur = args.t_inner
         wire_total = 0
-        for n in range(args.rounds):
-            batch = add_modalities(
-                {"tokens": jnp.asarray(next(batches)["tokens"])}, cfg, rng)
-            t0 = time.time()
-            if ctl is not None and t_cur != lcfg.inner_steps:
-                lcfg = lsgd.LocalSGDConfig(
-                    n_groups=G, inner_steps=t_cur, max_inner=500,
-                    metrics=metrics, average_opt_state=avg_opt)
-                rnd = jax.jit(lsgd.make_local_round(model.loss, opt, lcfg,
-                                                    layout=layout,
-                                                    exchange=exchange,
-                                                    shardexec=sexec),
-                              donate_argnums=(0,))
-            state, m = rnd(state, batch)
-            if ctl is not None and "grad_sq_traj" in m:
-                t_cur = ctl.update(np.asarray(m["grad_sq_traj"])[0])
-            wire_total += int(m["wire_bytes"])
-            if n % args.log_every == 0:
-                part = (f"part {float(m['participation']):.2f} "
-                        if "participation" in m else "")
-                print(f"round {n:4d} loss {float(jnp.mean(m['loss'])):.4f} "
-                      f"gsq {float(jnp.mean(m['grad_sq'])):.3e} "
-                      f"T {int(jnp.max(m['inner_steps']))} "
-                      f"wire {int(m['wire_bytes']):,}B "
-                      f"{part}({time.time() - t0:.2f}s)")
+        trace.meta.update({"comm": exchange.name,
+                           "delivery_rate": exchange.delivery_rate})
+        with obs.profile_span(args.profile):
+            for n in range(args.rounds):
+                with trace.phase("data"):
+                    batch = add_modalities(
+                        {"tokens": jnp.asarray(next(batches)["tokens"])},
+                        cfg, rng)
+                if ctl is not None and t_cur != lcfg.inner_steps:
+                    lcfg = lsgd.LocalSGDConfig(
+                        n_groups=G, inner_steps=t_cur, max_inner=500,
+                        metrics=metrics, average_opt_state=avg_opt)
+                    rnd = jax.jit(lsgd.make_local_round(
+                        model.loss, opt, lcfg, layout=layout,
+                        exchange=exchange, shardexec=sexec),
+                        donate_argnums=(0,))
+                with trace.phase("round") as f:
+                    state, m = f(rnd(state, batch))
+                if ctl is not None and "grad_sq_traj" in m:
+                    t_cur = ctl.update(np.asarray(m["grad_sq_traj"])[0])
+                rec = trace.emit_round(n, m)
+                wire_total += int(m["wire_bytes"])
+                if n % args.log_every == 0:
+                    print(f"round {n:4d} "
+                          f"loss {float(jnp.mean(m['loss'])):.4f} "
+                          f"gsq {float(jnp.mean(m['grad_sq'])):.3e} "
+                          f"T {int(jnp.max(m['inner_steps']))} "
+                          f"wire {int(m['wire_bytes']):,}B "
+                          f"part {float(m['participation']):.2f} "
+                          f"cons {float(jnp.mean(m['consensus_sq'])):.3e} "
+                          f"({rec['phase_s'].get('round', 0.0):.2f}s)")
         print(f"comm {exchange.name}: {wire_total:,} wire bytes over "
               f"{args.rounds} rounds")
         final = lsgd.server_params(state, layout=layout)
 
     if args.checkpoint:
-        ckpt_io.save(args.checkpoint, final,
-                     metadata={"arch": cfg.name, "rounds": args.rounds,
-                               "mode": args.mode})
+        with trace.phase("checkpoint"):
+            ckpt_io.save(args.checkpoint, final,
+                         metadata={"arch": cfg.name, "rounds": args.rounds,
+                                   "mode": args.mode})
+        trace.emit("checkpoint", path=args.checkpoint,
+                   seconds=round(trace.take_phases()["checkpoint"], 6))
         print(f"checkpoint -> {args.checkpoint}.npz")
+    trace.close()
+    if args.trace:
+        print(f"trace -> {args.trace} ({trace.n_records} records)")
 
 
 if __name__ == "__main__":

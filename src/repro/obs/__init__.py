@@ -1,0 +1,50 @@
+"""Observability subsystem (DESIGN.md §13).
+
+Three layers, one schema:
+
+* device-side round metrics — the localsgd rounds emit a UNIFORM metric
+  block every round (consensus distance, per-stream codec error mass,
+  push-sum backlog mass, participation/delivery) regardless of
+  topology/codec/fault configuration, so downstream consumers never
+  branch on which keys exist;
+* host-side phase tracing — ``Trace``/``Trace.phase`` fences with
+  ``jax.block_until_ready`` before reading the clock (async dispatch
+  makes unfenced deltas lies), annotates phases for the profiler, and
+  appends structured JSONL records;
+* reporting — ``repro.obs.report`` summarizes/validates a trace file;
+  the benchmarks route their timing through the same sink.
+"""
+from repro.obs.trace import (PhaseTimer, Trace, profile_span,  # noqa: F401
+                             to_jsonable)
+
+# bump when the JSONL record layout changes incompatibly; report.py
+# refuses to --check traces from a different major schema
+SCHEMA_VERSION = 1
+
+# keys present in EVERY localsgd round's metrics dict, every
+# configuration (the uniform contract, DESIGN.md §13). Per-stream keys
+# ride alongside: wire_bytes/<stream> and codec_err/<stream> for every
+# stream the round exchanges (params + averaged moment buffers).
+ROUND_KEYS = (
+    "loss", "grad_sq", "inner_steps",
+    "wire_bytes", "wire_bytes_up", "wire_bytes_down",
+    "consensus_sq", "consensus_sq_post",
+    "backlog_mass", "participation", "delivery_rate",
+)
+
+# host-measured phase names the launchers emit (checkpoint only appears
+# on rounds that save one)
+PHASES = ("data", "round", "step", "checkpoint")
+
+
+def round_metric_keys(streams=("params",)):
+    """The full uniform key set for a round exchanging ``streams``."""
+    per = tuple(f"wire_bytes/{s}" for s in streams)
+    per += tuple(f"codec_err/{s}" for s in streams)
+    return ROUND_KEYS + per
+
+
+def streams_of(metrics) -> tuple:
+    """Recover the stream names from a round record's metric keys."""
+    return tuple(sorted(k.split("/", 1)[1] for k in metrics
+                        if k.startswith("wire_bytes/")))

@@ -1,0 +1,184 @@
+"""Phase-fenced tracing: honest wall-clock + a structured JSONL sink.
+
+The problem this solves (ISSUE 7): jitted calls return BEFORE the work
+finishes (async dispatch), so ``t0 = time.time(); state = step(...);
+dt = time.time() - t0`` measures dispatch, not compute. Every phase
+timer here fences with ``jax.block_until_ready`` on the values the
+phase produced before reading the clock, and wraps the phase in
+``jax.profiler.TraceAnnotation`` so a perfetto dump (``--profile``)
+shows the same phase boundaries the JSONL records.
+
+Sink format (one JSON object per line):
+
+  {"kind": "meta", "schema": 1, ...caller meta...}        # first line
+  {"kind": "round", "round": n, "phase_s": {...}, "metrics": {...}}
+  {"kind": "step"|"bench"|"dryrun", ...}                  # other events
+
+``Trace(path=None)`` is a null sink that still fences and times — the
+launchers use one unconditionally so printed timings are honest even
+when nothing is written.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+
+def to_jsonable(x):
+    """Round metrics -> plain JSON: device arrays become floats/lists
+    (forces a host transfer — callers fence first, so this is cheap and
+    never blocks on in-flight work)."""
+    if isinstance(x, dict):
+        return {k: to_jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [to_jsonable(v) for v in x]
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    if hasattr(x, "ndim"):                  # jax/np array
+        import numpy as np
+        a = np.asarray(x)
+        if a.ndim == 0:
+            return (int(a) if np.issubdtype(a.dtype, np.integer)
+                    else float(a))
+        return a.astype(float).tolist()
+    return float(x)
+
+
+class PhaseTimer:
+    """Fenced wall-clock timer: ``fence(x)`` registers values the phase
+    produced; ``__exit__`` blocks until they are ready, THEN reads the
+    clock. Usable standalone (``with PhaseTimer() as t: ...; t.seconds``)
+    and as the engine under ``Trace.phase``."""
+
+    def __init__(self):
+        self.seconds = 0.0
+        self._fence = None
+
+    def __enter__(self):
+        self._fence = None
+        self.t0 = time.perf_counter()
+        return self
+
+    def fence(self, x):
+        self._fence = x
+        return x
+
+    # make the timer callable so ``with trace.phase("round") as f:
+    # state, m = f(rnd(state, batch))`` reads naturally
+    __call__ = fence
+
+    def __exit__(self, *exc):
+        if self._fence is not None:
+            import jax
+            jax.block_until_ready(self._fence)
+        self.seconds = time.perf_counter() - self.t0
+        return False
+
+
+class Trace:
+    """Structured trace sink + phase fencing (DESIGN.md §13).
+
+    ``path=None`` disables the file sink but keeps the fencing/timing
+    behavior, so launchers run one code path. The meta header is written
+    lazily on the first record so callers can build the trace before
+    knowing every meta field (``meta.update`` is fine until then).
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.path = Path(path) if path else None
+        self.meta = dict(meta or {})
+        self._phases: Dict[str, float] = {}
+        self._fh = None
+        self.n_records = 0
+
+    # -- phases -----------------------------------------------------------
+
+    @contextlib.contextmanager
+    def phase(self, name: str):
+        """Fenced, profiler-annotated phase. Durations accumulate under
+        ``name`` until the next ``emit_round`` pops them — several
+        phases (data, round, checkpoint) add up to one record."""
+        import jax
+        with jax.profiler.TraceAnnotation(name):
+            with PhaseTimer() as t:
+                yield t
+        self._phases[name] = self._phases.get(name, 0.0) + t.seconds
+
+    def phase_seconds(self, name: str) -> float:
+        """Accumulated seconds of ``name`` since the last emit."""
+        return self._phases.get(name, 0.0)
+
+    def take_phases(self) -> Dict[str, float]:
+        out, self._phases = self._phases, {}
+        return out
+
+    # -- the sink ---------------------------------------------------------
+
+    def _write(self, rec: dict):
+        self.n_records += 1
+        if self.path is None:
+            return
+        if self._fh is None:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self._fh = open(self.path, "w")
+            from repro import obs
+            header = {"kind": "meta", "schema": obs.SCHEMA_VERSION}
+            header.update(to_jsonable(self.meta))
+            self._fh.write(json.dumps(header) + "\n")
+        self._fh.write(json.dumps(rec) + "\n")
+        self._fh.flush()
+
+    def emit_round(self, n: int, metrics: Optional[dict] = None,
+                   kind: str = "round", **fields) -> dict:
+        """One per-round record: accumulated phase durations + the
+        round's metric dict (converted to JSON — callers fence first via
+        ``phase``). Returns the record so launchers can print from it."""
+        rec = {"kind": kind, "round": int(n),
+               "phase_s": {k: round(v, 6)
+                           for k, v in self.take_phases().items()},
+               "metrics": to_jsonable(metrics or {})}
+        rec.update(to_jsonable(fields))
+        self._write(rec)
+        return rec
+
+    def emit(self, kind: str, **fields) -> dict:
+        """A free-form event record (bench cells, dryrun phases)."""
+        rec = {"kind": kind}
+        rec.update(to_jsonable(fields))
+        self._write(rec)
+        return rec
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+@contextlib.contextmanager
+def profile_span(path: Optional[str]):
+    """Wrap a region in ``jax.profiler.start_trace`` (perfetto dump under
+    ``path``); no-op when path is falsy. Profiler caveat (DESIGN.md §13):
+    device annotations inside shard_map/jit come from XLA op metadata,
+    so the host-side TraceAnnotations are the reliable phase boundaries
+    on CPU."""
+    if not path:
+        yield
+        return
+    import jax
+    Path(path).mkdir(parents=True, exist_ok=True)
+    jax.profiler.start_trace(path)
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

@@ -173,6 +173,31 @@ class ShardExec:
         return shard_map(local, mesh=self.mesh, in_specs=(spec,),
                          out_specs=self.group_spec(), check_rep=False)
 
+    def consensus_sq_groups(self, use_pallas: bool):
+        """Per-group consensus distance ||x_g - x̄||² of a (G, Np) buffer:
+        pmean over the group axes gives the fleet mean, the deviation is
+        reduced shard-local (Pallas sq_norm kernel or one jnp fusion) and
+        psum'd over the shard axes -> (G,). Matches the replicated
+        ``x - mean(x, axis=0)`` reduction to float32 accumulation order
+        within each shard (parity ≤1e-5, DESIGN.md §13)."""
+        spec = self.buf_spec()
+        gax = self._entry(self.group_axes)
+        sax = self._entry(self.shard_axes)
+
+        def local(x):
+            x32 = x.astype(jnp.float32)
+            d = x32 - jax.lax.pmean(x32, gax)
+            if use_pallas:
+                from repro.kernels import use_interpret
+                from repro.kernels.sq_norm import sq_norm_groups
+                part = sq_norm_groups(d, interpret=use_interpret())
+            else:
+                part = jnp.sum(jnp.square(d), axis=-1)
+            return jax.lax.psum(part, sax)
+
+        return shard_map(local, mesh=self.mesh, in_specs=(spec,),
+                         out_specs=self.group_spec(), check_rep=False)
+
     # -- codec-free mixing ------------------------------------------------
 
     def mix(self, exch):

@@ -327,8 +327,9 @@ def test_faulty_server_survivor_averaging_and_participation(key):
 
 
 def test_faulty_server_round_metrics_report_participation(key):
-    """The localsgd round surfaces metrics['participation'] whenever
-    the comm state carries it (packed path; lossless rounds don't)."""
+    """The localsgd round surfaces metrics['participation'] every round
+    (packed path; lossless rounds report 1.0 — uniform schema,
+    DESIGN.md §13)."""
     params, batch = make_problem(key)
     layout = packing.layout_of(params)
     opt = optim.packed("sgd", 0.05, impl="jnp")
@@ -351,7 +352,8 @@ def test_faulty_server_round_metrics_report_participation(key):
     st0 = lsgd.init_state(params, opt, n_groups=G, layout=layout,
                           exchange=ex0)
     _, m0 = rnd0(st0, batch)
-    assert "participation" not in m0
+    assert float(m0["participation"]) == 1.0       # lossless: always 1.0
+    assert float(m0["delivery_rate"]) == 1.0
 
 
 def test_ef_residual_defers_on_undelivered_push(key):

@@ -313,9 +313,8 @@ def test_final_metrics_contract(key):
                                         layout=layout))
     sp = lsgd.init_state(params, opt_p, n_groups=G, layout=layout)
     new_sp, m = rnd(sp, batch)
-    assert set(m) == {"loss", "inner_steps", "grad_sq", "wire_bytes",
-                      "wire_bytes_up", "wire_bytes_down",
-                      "wire_bytes/params"}
+    from repro import obs
+    assert set(m) == set(obs.round_metric_keys(("params",)))
     # per-stream split sums to the old total (sgd: params only)
     assert int(m["wire_bytes/params"]) == int(m["wire_bytes"])
     # the traj round reports the gradient made AT step T-1; final mode is
