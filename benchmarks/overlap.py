@@ -1,0 +1,379 @@
+"""Overlapped-vs-barrier exchange benchmark + online-T wire accounting
+(ISSUE 8 / DESIGN.md §14).
+
+Three sections:
+
+  throughput   (forced-8-device child) the overlapped round vs the
+               barrier round at T ∈ {1, 4, 16} on the sharded 4x2 mesh,
+               ring/int8. Three fenced measurements per T — the
+               communication-free round (local), the barrier round, and
+               the overlapped round — give the honest phase split:
+               exch_s = barrier − local, overhead_s = overlap − barrier
+               (the correction/encode arithmetic the overlap round
+               adds). HEADLINE (gated): the MODELED overlapped round
+               time max(local, exch) + overhead vs the barrier round —
+               what a backend that schedules the round's leading
+               collective concurrently with the local-step block pays.
+               HONEST CPU CAVEAT: this container is a single serial
+               host backend (forced host devices share one core;
+               collectives are memcpy) — nothing truly runs
+               concurrently, the MEASURED wall-clock ratio is reported
+               alongside and sits at ~1x by construction. The modeled
+               ratio is built only from honestly fenced components of
+               real rounds, never from an assumed overlap.
+  convergence  delayed mixing preserves the convex-suite gsq floor:
+               barrier vs overlap at T=4 over the over-parameterized
+               quadratic suite; the one-round lag costs a small
+               constant, not the rate (gated).
+  online_t     the --adaptive-t online controller vs the static Sec-4
+               T*: both run the convex suite to the SAME gsq floor;
+               wire bytes per round are constant, so rounds-to-floor IS
+               total wire. The online controller's convergence relief
+               lengthens rounds as consensus collapses — it must reach
+               the floor with no more wire than static T* (gated; the
+               ISSUE 8 acceptance bar).
+
+Standalone: ``python benchmarks/overlap.py`` writes
+experiments/bench/overlap.json and the committed BENCH_overlap.json;
+``OVERLAP_SMOKE=1`` runs the reduced lane CI gates via run.py --check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:          # standalone invocation
+    sys.path.insert(0, str(REPO_ROOT))
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import child_env, save_result
+from repro import comm as comm_mod
+from repro import optim
+from repro.core import controller, localsgd as lsgd, theory
+from repro.optim import packing
+
+G = 4
+PROBE_K = 1                # dense probe rows: sizes compute vs exchange
+HEADLINE_BAR = 1.15        # modeled overlap speedup at T=4 (run.py gate)
+WIRE_BAR = 1.0             # static-T* wire / online wire must be >= 1
+
+
+def make_probe_loss(k: int, d: int):
+    """Dense-matvec probe: a (k, d) quadratic sized so the local-step
+    block and the exchange are COMPARABLE — the regime overlap targets.
+    (round_throughput's separable probe isolates the round engine, but
+    its local step is ~100x cheaper than the ring exchange here; with
+    nothing to hide, every overlap schedule models at ~1x. The T=1 row
+    still reports the exchange-dominated regime honestly.) H rides the
+    jit closure, not the batch, so it carries no group axis."""
+    H = jnp.asarray(np.random.RandomState(0).randn(k, d)
+                    .astype(np.float32) / np.sqrt(d))
+
+    def probe_loss(params, batch):
+        r = H @ params["w"].astype(jnp.float32) - batch["c"]
+        return 0.5 * jnp.sum(r * r) * 1e-6
+
+    return probe_loss
+
+
+def _median_round_s(rnd, state, batch, reps: int) -> float:
+    state, m = rnd(state, batch)             # compile + warm
+    jax.block_until_ready(m)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        state, m = rnd(state, batch)
+        jax.block_until_ready(m)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+# ---------------------------------------------------------------------------
+# throughput (forced-8-device child)
+# ---------------------------------------------------------------------------
+
+
+def _child_main(d: int, t_values, reps: int, k: int = PROBE_K) -> dict:
+    """Overlap-vs-barrier round timing on the sharded 4x2 mesh. Runs in
+    a subprocess (jax locks the device count at first init)."""
+    from jax.sharding import Mesh
+
+    from repro.sharding import shardexec as shx
+
+    out = {"n_devices": jax.device_count(), "d": d, "probe_k": k}
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(4, 2),
+                ("data", "model"))
+    sexec = shx.plan_for(mesh)
+    params = {"w": jnp.zeros((d,), jnp.float32)}
+    layout = packing.shard_layout(packing.layout_of(params),
+                                  sexec.n_shards)
+    batch = {"c": jnp.linspace(0.0, 1.0, G)}
+    probe_loss = make_probe_loss(k, d)
+    opt = optim.packed("sgd", 0.05, impl="jnp")
+    rows = {}
+    for t_inner in t_values:
+        cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner)
+        cell = {}
+        for tag, topo, ov in (("local", "none", False),
+                              ("barrier", "ring", False),
+                              ("overlap", "ring", True)):
+            ex = comm_mod.get_exchange(topo, "fp32" if topo == "none"
+                                       else "int8", G, overlap=ov,
+                                       impl="jnp")
+            rnd = jax.jit(lsgd.make_local_round(
+                probe_loss, opt, cfg, layout=layout, exchange=ex,
+                shardexec=sexec))
+            st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                                 exchange=ex)
+            cell[tag] = _median_round_s(rnd, st, batch, reps)
+        local_s, barrier_s, overlap_s = (cell["local"], cell["barrier"],
+                                         cell["overlap"])
+        exch_s = max(0.0, barrier_s - local_s)
+        overhead_s = max(0.0, overlap_s - barrier_s)
+        modeled_s = max(local_s, exch_s) + overhead_s
+        rows[f"T{t_inner}"] = {
+            "local_round_s": local_s, "barrier_round_s": barrier_s,
+            "overlap_round_s": overlap_s, "exchange_s": exch_s,
+            "overhead_s": overhead_s,
+            "modeled_overlap_round_s": modeled_s,
+            "modeled_speedup": barrier_s / modeled_s if modeled_s > 0
+            else 1.0,
+            "measured_speedup": barrier_s / overlap_s if overlap_s > 0
+            else 1.0,
+        }
+    out["by_t"] = rows
+    return out
+
+
+def _run_child(d: int, t_values, reps: int, k: int = PROBE_K) -> dict:
+    cmd = [sys.executable, os.path.abspath(__file__), "--child",
+           str(d), ",".join(map(str, t_values)), str(reps), str(k)]
+    r = subprocess.run(cmd, env=child_env(8), capture_output=True,
+                       text=True, timeout=1800, cwd=str(REPO_ROOT))
+    if r.returncode != 0:
+        raise SystemExit("overlap throughput child failed:\n"
+                         + (r.stderr or "")[-2000:])
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+# ---------------------------------------------------------------------------
+# convergence: delayed mixing keeps the convex-suite floor
+# ---------------------------------------------------------------------------
+
+
+def _quad_problem(seed: int = 0, r: int = 8, d: int = 40):
+    rng = np.random.RandomState(seed)
+    A = rng.randn(G, r, d).astype(np.float32) / np.sqrt(d)
+    w_star = rng.randn(d).astype(np.float32)
+    batch = {"A": jnp.asarray(A),
+             "b": jnp.asarray(np.einsum("grd,d->gr", A, w_star))}
+    params = {"w": jnp.asarray(rng.randn(d).astype(np.float32))}
+    return params, batch
+
+
+def quad_loss(params, batch):
+    r = batch["A"] @ params["w"] - batch["b"]
+    return 0.5 * jnp.sum(r ** 2)
+
+
+def convergence_section(rounds: int) -> dict:
+    params, batch = _quad_problem()
+    layout = packing.layout_of(params)
+    opt = optim.packed("sgd", 0.3, impl="jnp")
+    cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=4)
+    out = {"rounds": rounds}
+    for tag, ov in (("barrier", False), ("overlap", True)):
+        ex = comm_mod.get_exchange("ring", "int8", G, overlap=ov,
+                                   impl="jnp")
+        rnd = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg,
+                                            layout=layout, exchange=ex))
+        st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                             exchange=ex)
+        m = None
+        for _ in range(rounds):
+            st, m = rnd(st, batch)
+        out[tag] = {
+            "gsq_final": float(jnp.mean(m["grad_sq"])),
+            "consensus_sq_post": float(jnp.mean(m["consensus_sq_post"])),
+        }
+    out["gsq_ratio_overlap_vs_barrier"] = (
+        out["overlap"]["gsq_final"]
+        / max(out["barrier"]["gsq_final"], 1e-30))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# online T vs static T*: rounds (== wire) to the same floor
+# ---------------------------------------------------------------------------
+
+
+def _run_to_floor(make_t, params, batch, layout, ex, floor: float,
+                  max_rounds: int, *, on_round=None) -> dict:
+    """Drive the packed round with a per-round T from ``make_t`` until
+    the group-mean gsq reaches ``floor``. Jitted rounds are cached per
+    distinct T, mirroring the launcher's rebuild-on-T-change."""
+    opt = optim.packed("sgd", 0.3, impl="jnp")
+    st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                         exchange=ex)
+    cache, n, gsq, t_total = {}, 0, float("inf"), 0
+    wire_round = ex.wire_bytes_per_round(layout.padded)
+    while n < max_rounds and gsq > floor:
+        t_cur = int(make_t())
+        if t_cur not in cache:
+            cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_cur,
+                                      metrics="traj")
+            cache[t_cur] = jax.jit(lsgd.make_local_round(
+                quad_loss, opt, cfg, layout=layout, exchange=ex))
+        st, m = cache[t_cur](st, batch)
+        n += 1
+        t_total += t_cur
+        gsq = float(jnp.mean(m["grad_sq"]))
+        if on_round is not None:
+            on_round(m, t_cur)
+    return {"rounds": n, "local_steps": t_total,
+            "wire_bytes_total": wire_round * n, "gsq_final": gsq,
+            "reached_floor": gsq <= floor,
+            "distinct_t": sorted(cache)}
+
+
+def online_t_section(floor: float, max_rounds: int,
+                     r_cost: float = 1.0) -> dict:
+    """Static Sec-4 T* vs the online controller, identical problem and
+    exchange. Wire bytes per round are T-independent, so total wire is
+    rounds x wire_per_round for both — the online controller must reach
+    the floor with a wire total <= static's (ISSUE 8 acceptance)."""
+    params, batch = _quad_problem()
+    layout = packing.layout_of(params)
+    ex = comm_mod.get_exchange("server", "fp32", G, impl="jnp")
+
+    # -- static T*: fit the decay once on a probe round, then freeze ----
+    opt = optim.packed("sgd", 0.3, impl="jnp")
+    cfg0 = lsgd.LocalSGDConfig(n_groups=G, inner_steps=8, metrics="traj")
+    rnd0 = jax.jit(lsgd.make_local_round(quad_loss, opt, cfg0,
+                                         layout=layout, exchange=ex))
+    st0 = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                          exchange=ex)
+    _, m0 = rnd0(st0, batch)
+    fit = theory.fit_decay(np.asarray(m0["grad_sq_traj"])[0])
+    t_static = max(1, int(round(theory.t_star_from_fit(fit, r_cost))))
+    static = _run_to_floor(lambda: t_static, params, batch, layout, ex,
+                           floor, max_rounds)
+
+    # -- online: consensus guard + relief from the round's own metrics --
+    ctl = controller.OnlineT(r=r_cost, t_min=1, t_max=256)
+    state = {"t": t_static}
+
+    def on_round(m, t_used):
+        codec_err = sum(float(jnp.mean(v)) for k, v in m.items()
+                        if k.startswith("codec_err/"))
+        state["t"] = ctl.update(
+            np.asarray(m["grad_sq_traj"])[0], t_used=t_used,
+            # simulated fenced times consistent with r_cost: one local
+            # step costs r_cost x the exchange (the controller only
+            # consumes their ratio)
+            local_s=r_cost * t_used, exchange_s=1.0,
+            consensus_pre=float(jnp.mean(m["consensus_sq"])),
+            consensus_post=float(jnp.mean(m["consensus_sq_post"])),
+            codec_err=codec_err)
+
+    online = _run_to_floor(lambda: state["t"], params, batch, layout, ex,
+                           floor, max_rounds, on_round=on_round)
+    wire_ratio = (static["wire_bytes_total"]
+                  / max(online["wire_bytes_total"], 1))
+    return {"floor": floor, "t_static": t_static,
+            "static": static, "online": online,
+            "controller_tail": ctl.history[-3:] if ctl.history else [],
+            "wire_ratio_static_over_online": wire_ratio}
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(smoke: bool = False) -> dict:
+    # d in the multi-million range is what makes the exchange fence REAL
+    # on this host: the ring's int8 encode + ppermute hops then cost
+    # actual memory bandwidth (~1-2s/round) instead of free L2 memcpys,
+    # so exch_s = barrier - local measures wire work, not noise.
+    t_values = (4,) if smoke else (1, 4, 16)
+    d = 1 << 21 if smoke else 1 << 22
+    reps = 3 if smoke else 7
+    thr = _run_child(d, t_values, reps, PROBE_K)
+    conv = convergence_section(rounds=60 if smoke else 200)
+    onl = online_t_section(floor=5e-3 if smoke else 1e-3,
+                           max_rounds=200 if smoke else 600)
+    t4 = thr["by_t"]["T4"]
+    bar = 1.05 if smoke else HEADLINE_BAR
+    payload = {
+        "G": G,
+        "throughput": thr,
+        "convergence": conv,
+        "online_t": onl,
+        "headline": {
+            "topology": "ring", "codec": "int8", "T": 4, "d": thr["d"],
+            "modeled_speedup_T4": t4["modeled_speedup"],
+            "measured_speedup_T4": t4["measured_speedup"],
+            "bar": bar,
+            "note": "MODELED from fenced components (barrier / "
+                    "(max(local, exch) + overhead)); all three fences "
+                    "run the same sharded round engine so exch_s is "
+                    "the exchange's marginal cost. This container is a "
+                    "serial single-core host backend — nothing truly "
+                    "runs concurrently, so the measured wall-clock "
+                    "ratio rides alongside at ~1x; see module "
+                    "docstring",
+        },
+        "headline_online_t": {
+            "wire_ratio_static_over_online":
+                onl["wire_ratio_static_over_online"],
+            "bar": WIRE_BAR,
+            "static_wire_bytes": onl["static"]["wire_bytes_total"],
+            "online_wire_bytes": onl["online"]["wire_bytes_total"],
+        },
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+    }
+    ok = (t4["modeled_speedup"] >= bar
+          and conv["overlap"]["gsq_final"]
+          <= 10 * conv["barrier"]["gsq_final"] + 1e-9
+          and conv["overlap"]["gsq_final"] < (1e-2 if smoke else 2e-3)
+          and onl["online"]["reached_floor"]
+          and onl["wire_ratio_static_over_online"] >= WIRE_BAR)
+    payload["pass"] = bool(ok)
+    return payload
+
+
+def main() -> dict:
+    smoke = bool(int(os.environ.get("OVERLAP_SMOKE", "0")))
+    payload = run(smoke=smoke)
+    save_result("overlap_smoke" if smoke else "overlap", payload)
+    if not smoke:
+        # the committed perf-trajectory artifact — full runs only, so CI
+        # smoke runs never clobber it with reduced data
+        (REPO_ROOT / "BENCH_overlap.json").write_text(
+            json.dumps(payload, indent=1, default=float))
+    return payload
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        d_ = int(sys.argv[2])
+        ts_ = tuple(int(x) for x in sys.argv[3].split(","))
+        reps_ = int(sys.argv[4])
+        k_ = int(sys.argv[5]) if len(sys.argv) > 5 else PROBE_K
+        print(json.dumps(_child_main(d_, ts_, reps_, k_), default=float))
+        sys.exit(0)
+    r = main()
+    print(json.dumps({"headline": r["headline"],
+                      "headline_online_t": r["headline_online_t"]},
+                     indent=1))
+    sys.exit(0 if r["pass"] else 1)

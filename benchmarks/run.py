@@ -22,8 +22,8 @@ sys.path.insert(0, str(REPO_ROOT))
 from benchmarks import (ablation_opt_state, comm_bytes, comm_reduction,
                         fault_tolerance, fig2a_feasibility,
                         fig2b_linear_rate, fig3_intersection, fig4_deepnet,
-                        fig5_quartic, fig67_nodes, roofline_report,
-                        round_throughput)
+                        fig5_quartic, fig67_nodes, overlap,
+                        roofline_report, round_throughput)
 
 BENCHES = [
     ("fig2a_feasibility", fig2a_feasibility.main,
@@ -69,6 +69,12 @@ BENCHES = [
                f"sharded={r['headline_sharded']['push_sum_gsq_margin']:.1f}x"
                f" unbias={r['headline']['push_sum_unbias_factor']:.0f}x"
                " (bar 100)"),
+    ("overlap", overlap.main,
+     lambda r: "overlap modeled speedup T=4="
+               f"{r['headline']['modeled_speedup_T4']:.2f}x (bar 1.15) "
+               "online-T wire ratio={:.2f}x (bar 1)".format(
+                   r["headline_online_t"]
+                   ["wire_ratio_static_over_online"])),
 ]
 
 
@@ -93,6 +99,10 @@ HEADLINE_BARS = {
         ("headline", "push_sum_unbias_factor", "unbias_bar"),
         ("headline_sharded", "push_sum_gsq_margin", "bar"),
     ],
+    "BENCH_overlap.json": [
+        ("headline", "modeled_speedup_T4", "bar"),
+        ("headline_online_t", "wire_ratio_static_over_online", "bar"),
+    ],
 }
 
 # fresh smoke re-runs: (name, script, env toggles). Each script exits
@@ -104,6 +114,7 @@ SMOKE_RUNS = [
      {"COMM_BYTES_SMOKE": "1"}),
     ("fault_tolerance", "benchmarks/fault_tolerance.py",
      {"FAULT_SMOKE": "1"}),
+    ("overlap", "benchmarks/overlap.py", {"OVERLAP_SMOKE": "1"}),
 ]
 
 

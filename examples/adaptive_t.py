@@ -101,11 +101,93 @@ def demo_moment_codec(n_model: int = 1_000_000, step_time_s: float = 2e-6):
         demo(f"quadratic ({ex.name} wire)", power=1, lr=1.0, ctl=ctl)
 
 
+def demo_online(rounds: int = 120):
+    """The ONLINE controller (``--adaptive-t online``, DESIGN.md §14):
+    instead of pricing r once and re-fitting only the decay order, every
+    round feeds back the measured consensus contraction and codec error
+    mass from the §13 telemetry. Early on the consensus guard holds T
+    down (lossy exchanges barely keep the groups together); as the run
+    converges and the consensus mass collapses, the relief factor
+    sqrt(c0/consensus) ramps T up — fewer, longer rounds at the tail.
+    Wire bytes per round are T-independent, so the ramp is a direct
+    wire saving vs the static Sec-4 T* run to the same floor."""
+    import jax
+
+    from repro import optim
+    from repro.core import localsgd as lsgd
+    from repro.core.controller import OnlineT
+    from repro.optim import packing
+
+    g = 4
+    rng = np.random.RandomState(0)
+    A = rng.randn(g, 8, 40).astype(np.float32) / np.sqrt(40)
+    w_star = rng.randn(40).astype(np.float32)
+    batch = {"A": jnp.asarray(A),
+             "b": jnp.asarray(np.einsum("grd,d->gr", A, w_star))}
+    params = {"w": jnp.asarray(rng.randn(40).astype(np.float32))}
+    layout = packing.layout_of(params)
+    opt = optim.packed("sgd", 0.3, impl="jnp")
+    ex = comm_mod.get_exchange("server", "int8", g)
+    wire = ex.wire_bytes_per_round(layout.padded)
+
+    def quad_loss(p, b):
+        return 0.5 * jnp.sum((b["A"] @ p["w"] - b["b"]) ** 2)
+
+    def run(make_t, tag):
+        st = lsgd.init_state(params, opt, n_groups=g, layout=layout,
+                             exchange=ex)
+        ctl_rounds, cache, gsq, t_log = 0, {}, float("inf"), []
+        while ctl_rounds < rounds and gsq > 1e-3:
+            t = int(make_t())
+            if t not in cache:
+                cfg = lsgd.LocalSGDConfig(n_groups=g, inner_steps=t,
+                                          metrics="traj")
+                cache[t] = jax.jit(lsgd.make_local_round(
+                    quad_loss, opt, cfg, layout=layout, exchange=ex))
+            st, m = cache[t](st, batch)
+            ctl_rounds += 1
+            t_log.append(t)
+            gsq = float(jnp.mean(m["grad_sq"]))
+            yield m, t
+        print(f"   {tag:9s}: {ctl_rounds} rounds x {wire:,} B "
+              f"= {ctl_rounds * wire:,} wire B  "
+              f"(gsq {gsq:.1e}, T path {t_log[0]}→{t_log[-1]})")
+
+    print("-- online T: consensus telemetry ramps T as the run "
+          "converges --")
+    for _m, _t in run(lambda: 4, "static T=4"):
+        pass
+    ctl = OnlineT(r=1.0, t_min=1, t_max=64)
+    state = {"t": 4}
+
+    def online_t():
+        return state["t"]
+
+    shown = set()
+    for m, t in run(online_t, "online"):
+        cons = float(jnp.mean(m["consensus_sq"]))
+        state["t"] = ctl.update(
+            np.asarray(m["grad_sq_traj"])[0], t_used=t,
+            local_s=1.0 * t, exchange_s=1.0,
+            consensus_pre=cons,
+            consensus_post=float(jnp.mean(m["consensus_sq_post"])),
+            codec_err=sum(float(jnp.mean(v)) for k, v in m.items()
+                          if k.startswith("codec_err/")))
+        h = ctl.history[-1]
+        bucket = len(ctl.history) // 20
+        if bucket not in shown:            # a few waypoints, not 100 rows
+            shown.add(bucket)
+            print(f"   round {len(ctl.history):3d}: consensus "
+                  f"{cons:.1e}  guard γ̂={h['gamma']:.2f}  "
+                  f"relief={h['relief']:.1f}  -> T={h['t']}")
+
+
 def main():
     demo("quadratic", power=1, lr=1.0, r=0.01)
     demo("quartic", power=2, lr=0.5, r=0.01)
     demo_measured_comm()
     demo_moment_codec()
+    demo_online()
 
 
 if __name__ == "__main__":

@@ -144,6 +144,44 @@ def int8(chunk: int = 256, seed: int = 0, *, impl: str = "auto") -> Codec:
                  chunk=chunk, noise=noise, compress_rows=compress_rows)
 
 
+def int8z(chunk: int = 256, seed: int = 0, *, impl: str = "auto") -> Codec:
+    """Zero-preserving int8: the moment-friendly variant closing the
+    DESIGN.md §10 caveat (per-chunk ABSOLUTE scales misfit moment chunks
+    that mix live and dead coordinates — a dead coordinate could receive
+    a full-quantum ``m`` kick over ``v̂ ≈ 0`` and take a 1/eps-sized
+    step).
+
+    Same wire format and bytes as ``int8`` (1 byte/element + one fp32
+    scale per chunk), but every element smaller than HALF a quantum
+    rounds DETERMINISTICALLY to exact zero instead of stochastically to
+    ``±scale``: the rounding noise is pinned to 0.5 wherever
+    ``|row| < scale/2``, so ``floor(x/s + 0.5) == 0`` there. The trade
+    is explicit — sub-half-quantum mass is dropped (bias bounded by
+    ``scale/2`` per element, vanishing with the round delta) instead of
+    unbiasedly dithered; elements at or above half a quantum keep int8's
+    exact stochastic-rounding semantics. The mask is computed from the
+    row values alone BEFORE the qdq core, so the pallas and jnp impls
+    consume identical noise and still agree exactly, and the shard_map
+    exchange (which slices noise and rows identically) stays
+    bit-identical to the replicated path."""
+    base = int8(chunk=chunk, seed=seed, impl=impl)
+
+    def compress_rows(rows, u):
+        amax = jnp.max(jnp.abs(rows), axis=-1, keepdims=True)
+        scale = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+        u = jnp.where(jnp.abs(rows) < 0.5 * scale, 0.5, u)
+        return base.compress_rows(rows, u)
+
+    def compress(delta, state):
+        rows = packing.chunk_rows(delta, chunk)
+        out = compress_rows(rows, base.noise(state["count"], rows.shape))
+        return (packing.unchunk_rows(out, delta.shape),
+                {"count": state["count"] + 1})
+
+    return dataclasses.replace(base, name="int8z", compress=compress,
+                               compress_rows=compress_rows)
+
+
 def topk(frac: float = 0.05, *, impl: str = "auto") -> Codec:
     """Magnitude top-k sparsification with error feedback.
 
@@ -211,7 +249,7 @@ def defer_undelivered(state: dict, d_hat, delivered):
             "residual": jax.tree.map(back, state["residual"], d_hat)}
 
 
-CODECS = ("fp32", "fp16", "bf16", "int8", "topk")
+CODECS = ("fp32", "fp16", "bf16", "int8", "int8z", "topk")
 
 
 def get_codec(name: str, *, impl: str = "auto", chunk: int = 256,
@@ -224,6 +262,8 @@ def get_codec(name: str, *, impl: str = "auto", chunk: int = 256,
         return bf16()
     if name == "int8":
         return int8(chunk=chunk, seed=seed, impl=impl)
+    if name == "int8z":
+        return int8z(chunk=chunk, seed=seed, impl=impl)
     if name == "topk":
         return topk(frac=topk_frac, impl=impl)
     raise ValueError(f"unknown codec {name!r}: valid codecs are {CODECS}")

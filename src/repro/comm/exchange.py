@@ -41,6 +41,17 @@ value for a lost neighbor payload: rows stay stochastic, columns do not
 (the default) leaves every code path bit-exact with the fault-free
 engine.
 
+Overlap (DESIGN.md §14): ``overlap=True`` turns the round into its
+double-buffered delayed-mixing variant — the round mixes the PREVIOUS
+round's encoded payload (riding ``comm_state["inflight"]``) while its
+own local steps run, then encodes a fresh payload for the next round.
+Semantically this is bounded staleness s=1 on every topology; the mixing
+collective is issued before the local-step block in the jitted round so
+a parallel backend can overlap communication with compute.
+``get_exchange`` refuses the combinations whose wire interleaves with
+the mixing (async_stale, push_sum, downlink codecs, fault plans,
+multi-hop rounds).
+
 The round's payload is MULTI-STREAM (DESIGN.md §10): the ``params``
 stream plus one stream per optimizer moment buffer (momentum ``mu``,
 adamw ``m``/``v``) when the round averages opt state. ``codec`` applies
@@ -112,6 +123,14 @@ class Exchange:
     # (default) is the reliable network — every path stays literally the
     # fault-free code, bit-exact with the PR-5 exchange.
     fault_plan: Optional[faults_mod.FaultPlan] = None
+    # double-buffered delayed mixing (DESIGN.md §14): the round MIXES the
+    # PREVIOUS round's encoded payload (comm_state["inflight"]) — the
+    # collective is issued before the local-step block so a parallel
+    # backend overlaps it with compute — and encodes a fresh payload for
+    # the next round. One-round-stale mixing on every topology
+    # (async_stale s=1 semantics); False (default) keeps the barrier
+    # engine bit-exactly.
+    overlap: bool = False
 
     @property
     def mcodec(self) -> codecs_mod.Codec:
@@ -166,12 +185,16 @@ class Exchange:
         if self.faulty:
             base += (f"+drop{self.fault_plan.drop_rate:g}"
                      f"@{self.fault_plan.seed}")
+        if self.overlap:
+            base += "+ov"
         return base
 
     @property
     def stateful(self) -> bool:
         if self.topology == "none":
             return False   # no wire: the codecs never run, no state
+        if self.overlap:
+            return True    # the in-flight payload IS round-to-round state
         return (self.topology in ("async_stale", "push_sum")
                 or self.codec.stateful or self.mcodec.stateful
                 or self.lossy_downlink or self.faulty)
@@ -205,6 +228,18 @@ class Exchange:
                 cstate[k] = self.mcodec.init(v)
         if self.codec.stateful or (moments and self.mcodec.stateful):
             state["codec"] = cstate
+        if self.overlap:
+            # the double buffer (DESIGN.md §14): round r mixes what round
+            # r-1 put here. Initialized to the (replicated) initial
+            # params, so round 0's delayed-mixing correction is exactly
+            # zero — one uniform code path, no special first round. A
+            # real COPY for the same donation-safety reason as "pushed".
+            state["inflight"] = {
+                "params": jax.tree.map(jnp.copy, params_G)}
+            if moments:
+                state["inflight"].update(
+                    {k: jax.tree.map(jnp.copy, v)
+                     for k, v in moments.items()})
         if self.topology == "async_stale":
             # a real COPY: the staleness buffer must not alias the live
             # params (donated train states would double-donate the buffer)
@@ -705,6 +740,52 @@ class Exchange:
         mixed, new_state = self.streams({"params": x_G}, xs0, comm_state)
         return mixed["params"], new_state
 
+    # -- overlap: delayed mixing (DESIGN.md §14) ---------------------------
+
+    def encode_streams(self, xs: dict, xs0: dict, comm_state: dict):
+        """Codec-encode every stream ONCE, with no mixing: what the
+        overlap round puts IN FLIGHT (``comm_state["inflight"]``) for the
+        NEXT round to mix. Identity codecs ship the value itself; lossy
+        codecs ship ``x0 + decode(encode(x - x0))`` — exactly the decoded
+        payload the barrier engine would mix this round — and advance
+        their codec state once (int8's rng counter, topk's EF residual).
+        ``get_exchange`` refuses overlap on the topologies whose wire
+        interleaves with the mixing (async schedules, push-sum mass,
+        faults, downlink re-encodes), so this single-shot delta path is
+        the whole story. Returns ``({name: decoded}, new_comm_state)``."""
+        new_state = dict(comm_state)
+        cstates = dict(comm_state.get("codec", {}))
+        touched = False
+        x_hat = {}
+        for name, x in xs.items():
+            codec = self.stream_codec(name)
+            if codec.identity:
+                x_hat[name] = x
+                continue
+            with jax.named_scope("encode"):
+                delta = jax.tree.map(lambda a, b: a - b, x, xs0[name])
+                d_hat, cs = codec.compress(delta, cstates.get(name, {}))
+            x_hat[name] = jax.tree.map(lambda b, d: b + d,
+                                       xs0[name], d_hat)
+            if codec.stateful:
+                cstates[name] = cs
+                touched = True
+        if touched:
+            new_state["codec"] = cstates
+        return x_hat, new_state
+
+    def mix_inflight(self, inflight: dict) -> dict:
+        """Mix the PREVIOUS round's decoded in-flight payload, codec-free
+        (it was encoded when it was shipped — re-coding it here would
+        double-charge the wire noise): the collective the jitted overlap
+        round issues BEFORE its local-step block, so a parallel backend
+        can schedule both concurrently (DESIGN.md §14). With overlap the
+        decentralized topologies run exactly one codec-free W hop
+        (``get_exchange`` refuses ``mix_rounds > 1`` there) — identical
+        bytes to the barrier engine's single-hop round."""
+        with jax.named_scope("mix_inflight"):
+            return {k: self.mix(v) for k, v in inflight.items()}
+
     # -- wire accounting ---------------------------------------------------
 
     def senders_per_round(self) -> float:
@@ -828,7 +909,7 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
                  moment_codec: str = "fp32", downlink_codec: str = "",
                  fused: bool = True, drop_rate: float = 0.0,
                  stall_rate: float = 0.0, fault_seed: int = 0,
-                 dropouts=()) -> Exchange:
+                 dropouts=(), overlap: bool = False) -> Exchange:
     """Build an Exchange from names (the ``--comm`` / ``--codec`` /
     ``--moment-codec`` / ``--downlink-codec`` flags). ``moment_codec``
     applies to every moment stream of the payload (DESIGN.md §10); topk
@@ -839,10 +920,70 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
     assemble a deterministic FaultPlan (the ``--drop-rate`` /
     ``--fault-seed`` flags, DESIGN.md §12); all-zero (the default)
     attaches NO plan, keeping every path bit-exact with the fault-free
-    engine. Every refusal below names the valid alternatives."""
+    engine. ``overlap`` turns on double-buffered delayed mixing
+    (DESIGN.md §14, the ``--overlap`` flag): the round mixes the previous
+    round's in-flight payload while its own local steps run. Every
+    refusal below names the valid alternatives."""
     if topology not in TOPOLOGIES:
         raise ValueError(f"unknown topology {topology!r}: valid "
                          f"topologies are {TOPOLOGIES}")
+    if overlap:
+        if topology == "none":
+            raise NotImplementedError(
+                "topology 'none' has no wire, so there is nothing to put "
+                "in flight — overlap would double-buffer a payload that "
+                "never ships (DESIGN.md §14); valid overlap topologies: "
+                "'server', 'ring', 'gossip'")
+        if topology == "async_stale":
+            raise NotImplementedError(
+                "overlap + async_stale: overlap IS bounded staleness "
+                "(s=1 delayed mixing on every topology, DESIGN.md §14) — "
+                "stacking the per-group staleness schedule on top would "
+                "compound the lag ambiguously; use overlap on 'server' "
+                "(same semantics, every group one round stale) or plain "
+                "async_stale with staleness=1")
+        if topology == "push_sum":
+            raise NotImplementedError(
+                "overlap + push_sum: the mass counters and per-edge "
+                "backlogs must update in the SAME step that mixes the "
+                "payload (sum(mass) + sum(backlog_w) == G every round, "
+                "DESIGN.md §12) — a one-round-stale mix would break mass "
+                "conservation; valid overlap topologies: 'server', "
+                "'ring', 'gossip'")
+        if downlink_codec:
+            raise NotImplementedError(
+                "overlap + downlink_codec: the downlink re-encodes the "
+                "MIXED mean against the last broadcast, but with overlap "
+                "the mix happens a round after the encode — the "
+                "broadcast reference would be two rounds stale and the "
+                "in-flight payload no longer matches what receivers "
+                "decode (DESIGN.md §14); drop one of the two, or use "
+                "the barrier engine with downlink_codec")
+        if mix_rounds != 1 and topology in ("ring", "gossip"):
+            raise NotImplementedError(
+                "overlap + mix_rounds > 1: a multi-hop round re-encodes "
+                "per hop, but the in-flight payload is a SINGLE encoded "
+                "buffer — only one codec-free hop can ride it "
+                "(DESIGN.md §14); use mix_rounds=1 with overlap, or the "
+                "barrier engine for k-hop rounds")
+        if drop_rate or stall_rate or dropouts:
+            raise NotImplementedError(
+                "overlap + fault injection: the fault masks gate the "
+                "mixing in the round that SHIPS the payload — with "
+                "delayed mixing the drop schedule and the mix are a "
+                "round apart, and retry-from-pushed semantics (DESIGN.md "
+                "§12) have no in-flight analogue yet; valid overlap "
+                "networks are fault-free, or use the barrier engine "
+                "with a FaultPlan")
+        if codec == "topk" or moment_codec == "topk":
+            raise NotImplementedError(
+                "overlap + topk: the error-feedback residual re-offers "
+                "unshipped mass against a reference that is one round "
+                "stale under delayed mixing — the EF loop gain exceeds 1 "
+                "at small selection fractions and the run diverges "
+                "(DESIGN.md §14 refusal matrix, measured: ring/topk "
+                "f=0.05 → inf); valid overlap codecs: 'fp32', 'fp16', "
+                "'bf16', 'int8', 'int8z'")
     if downlink_codec:
         if topology in ("ring", "gossip"):
             raise NotImplementedError(
@@ -875,7 +1016,7 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
             "async_stale + topk: error feedback assumes every round's "
             "payload is delivered, but the staleness schedule drops "
             "non-pushing rounds (DESIGN.md §8); valid async_stale "
-            "codecs: 'fp32', 'fp16', 'bf16', 'int8'")
+            "codecs: 'fp32', 'fp16', 'bf16', 'int8', 'int8z'")
     if moment_codec == "topk":
         # moments are re-estimated each step, not accumulated deltas of a
         # fixed target: delaying dropped moment mass via error feedback
@@ -884,19 +1025,20 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
         raise NotImplementedError(
             "topk is not supported as a moment codec (DESIGN.md §10): "
             "error feedback would re-offer rounds-stale moment mass; "
-            "valid moment codecs: 'fp32', 'fp16', 'bf16', 'int8'")
+            "valid moment codecs: 'fp32', 'fp16', 'bf16', 'int8', "
+            "'int8z'")
     if topology == "push_sum":
         # refusal matrix (DESIGN.md §12): the push-sum wire carries
         # cumulative (value, weight) mass counters, not round deltas —
         # int8's per-round delta scaling and topk's error feedback have
         # no delta reference to code against. Cast codecs work: the
         # cast residue stays in the edge backlog (deferred, not lost).
-        if codec in ("int8", "topk"):
+        if codec in ("int8", "int8z", "topk"):
             raise NotImplementedError(
                 f"push_sum + {codec}: the push-sum wire carries "
                 "cumulative mass, not round deltas (DESIGN.md §12); "
                 "valid push_sum codecs: 'fp32', 'fp16', 'bf16'")
-        if moment_codec in ("int8", "topk"):
+        if moment_codec in ("int8", "int8z", "topk"):
             raise NotImplementedError(
                 f"push_sum + moment_codec={moment_codec!r}: moment "
                 "streams ride the same mass-counter wire (DESIGN.md "
@@ -933,7 +1075,7 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
                     mix_rounds=mix_rounds,
                     staleness=staleness if topology == "async_stale" else 0,
                     w=w, moment_codec=mc, downlink_codec=dc, fused=fused,
-                    fault_plan=plan)
+                    fault_plan=plan, overlap=overlap)
 
 
 def default_exchange(n_groups: int) -> Exchange:

@@ -102,3 +102,108 @@ class AdaptiveT:
             self._t = self.ema * self._t + (1.0 - self.ema) * t_star
             self.history.append((fit, t_star, self.t))
         return self.t
+
+
+@dataclasses.dataclass
+class OnlineT:
+    """Per-round T controller driven by the measured round telemetry
+    (``--adaptive-t online``, DESIGN.md §14).
+
+    ``AdaptiveT`` prices the cost ratio r ONCE from static wire bytes and
+    then only re-fits the local decay order. With the §13/§14 signal set
+    complete — consensus distance pre/post exchange, per-stream codec
+    error mass, and honestly fenced phase times — the tradeoff can be
+    re-estimated every round from what actually happened:
+
+    * **cost ratio online**: r̂ = EMA of (local_s / T) / exchange_s from
+      the fenced phase times, so codec switches, overlap hiding, and
+      real link speed all move r without a bandwidth guess;
+    * **consensus guard**: γ̂ = EMA of (consensus_post + codec_err) /
+      consensus_pre measures how much deviation one exchange actually
+      retires. Weak mixing (γ̂ → 1: lossy codec, sparse gossip) means
+      long local bursts drift apart faster than rounds can pull them
+      back — T is scaled by (1 − γ̂);
+    * **convergence relief**: as the run converges the groups agree,
+      exchanges buy little, and rounds should lengthen — T is scaled by
+      sqrt(c₀ / consensus_pre) (clipped to [1, relief_max]), which ramps
+      T up as consensus distance falls below its initial mass c₀. Fewer
+      rounds at the tail is where online-T beats static T* on total
+      wire bytes.
+
+    The cost-optimal core is still the paper's Sec-4 T* from the fitted
+    decay order; the two telemetry factors multiply it, and the result
+    is EMA-smoothed exactly like ``AdaptiveT``. Missing signals
+    degrade gracefully: with no timing the ratio keeps its prior, with
+    no consensus telemetry both factors stay 1 and the controller
+    reduces to ``AdaptiveT`` with a measured r.
+    """
+
+    r: float = 1.0
+    t_min: int = 1
+    t_max: int = 10_000
+    ema: float = 0.5            # smoothing of T across rounds
+    r_ema: float = 0.7          # smoothing of the measured cost ratio
+    guard_ema: float = 0.5      # smoothing of the consensus guard
+    relief_max: float = 8.0     # cap on the convergence relief factor
+    _t: float = 10.0
+    _gamma: float = 0.0
+    _c0: Optional[float] = None
+    history: Optional[List] = None
+
+    def __post_init__(self):
+        self.history = []
+
+    @property
+    def t(self) -> int:
+        return int(np.clip(round(self._t), self.t_min, self.t_max))
+
+    def update(self, grad_sq_traj, *, t_used: int,
+               local_s: Optional[float] = None,
+               exchange_s: Optional[float] = None,
+               consensus_pre: Optional[float] = None,
+               consensus_post: Optional[float] = None,
+               codec_err: float = 0.0) -> int:
+        """Feed one round's telemetry; returns the next round's T.
+
+        ``grad_sq_traj``: per-step local ||grad||² trajectory (metrics
+        ``grad_sq_traj``, group-mean). ``t_used``: the T the round
+        actually ran. ``local_s`` / ``exchange_s``: fenced phase times
+        (``local_total_s``, ``exchange_total_s``). ``consensus_pre`` /
+        ``consensus_post``: group-mean ``consensus_sq`` /
+        ``consensus_sq_post``. ``codec_err``: summed group-mean
+        ``codec_err/*`` mass."""
+        # -- cost ratio from the fenced phase times -----------------------
+        if (local_s is not None and exchange_s is not None
+                and local_s > 0.0 and exchange_s > 0.0 and t_used >= 1):
+            r_meas = (local_s / t_used) / exchange_s
+            self.r = self.r_ema * self.r + (1.0 - self.r_ema) * r_meas
+        # -- consensus guard ----------------------------------------------
+        if (consensus_pre is not None and consensus_post is not None
+                and consensus_pre > 0.0):
+            gamma = float(np.clip(
+                (consensus_post + codec_err) / consensus_pre, 0.0, 0.95))
+            self._gamma = (self.guard_ema * self._gamma
+                           + (1.0 - self.guard_ema) * gamma)
+        # -- convergence relief -------------------------------------------
+        relief = 1.0
+        if consensus_pre is not None and consensus_pre > 0.0:
+            if self._c0 is None:
+                self._c0 = float(consensus_pre)
+            relief = float(np.clip(np.sqrt(self._c0 / consensus_pre),
+                                   1.0, self.relief_max))
+        # -- cost-optimal core (paper Sec 4) ------------------------------
+        fit = theory.fit_decay(np.asarray(grad_sq_traj))
+        t_cost = None
+        if fit is not None:
+            try:
+                t_cost = theory.t_star_from_fit(fit, self.r)
+            except (ValueError, OverflowError):
+                t_cost = None
+        if t_cost is None:
+            t_cost = self._t
+        target = t_cost * (1.0 - self._gamma) * relief
+        self._t = self.ema * self._t + (1.0 - self.ema) * target
+        self.history.append({"r": self.r, "gamma": self._gamma,
+                             "relief": relief, "t_cost": t_cost,
+                             "t": self.t})
+        return self.t

@@ -104,6 +104,13 @@ def _resolve_exchange(exchange, cfg: LocalSGDConfig, layout):
         raise NotImplementedError(
             f"{exch.topology} cannot average opt state; set "
             "average_opt_state=False (DESIGN.md §10)")
+    if exch.overlap and layout is None:
+        raise NotImplementedError(
+            "the overlapped (delayed-mixing) exchange double-buffers the "
+            "packed flat stream payload as comm['inflight'] — run the "
+            "round with a packing.Layout and a packed optimizer "
+            "(DESIGN.md §14); the pytree path has no single donation-"
+            "safe buffer to put in flight")
     return exch
 
 
@@ -134,6 +141,12 @@ def _check_comm_state(exch, state_G, mkeys=()):
             "per-group staleness buffers; build the train state with "
             "init_state(..., exchange=...) so comm['pushed'] is "
             "allocated (DESIGN.md §12)")
+    if exch.overlap and "inflight" not in state_G.get("comm", {}):
+        raise ValueError(
+            "an overlapped exchange double-buffers the previous round's "
+            "payload; build the train state with init_state(..., "
+            "exchange=...) so comm['inflight'] is allocated "
+            "(DESIGN.md §14)")
 
 
 def _round_wire_bytes(exch, params_G, opt_G, avg_opt: bool,
@@ -168,9 +181,12 @@ def _clamp_nonneg_streams(mixed: dict, opt, exch) -> dict:
     by the chunk scale, so small-magnitude v elements can come back
     slightly negative and sqrt(v) would NaN. The true value is >= 0, so
     the projection only shrinks the decode error. Identity moment codecs
-    skip this entirely (the default path stays bit-exact)."""
-    if (exch.mcodec.identity and not exch.lossy_downlink) \
-            or exch.topology == "none":
+    skip this entirely (the default path stays bit-exact). Overlap mode
+    always projects: the delayed-mixing correction is ADDITIVE
+    (``v_T + mix(inflight) - inflight``), so even an fp32 payload can
+    push a near-zero v element negative (DESIGN.md §14)."""
+    if ((exch.mcodec.identity and not exch.lossy_downlink
+         and not exch.overlap) or exch.topology == "none"):
         return mixed
     nonneg = getattr(opt, "moment_nonneg", ())
     return {k: (jax.tree.map(lambda x: jnp.maximum(x, 0.0), v)
@@ -480,14 +496,23 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
     flat_vg = packing.value_and_flat_grad(loss_fn, layout)
     slayout = packing.stream_layout_for(opt, layout)
 
+    exch_streams = mix_inflight = encode_streams = None
     if shardexec is not None:
         opt_step = shardexec.opt_step(opt)
-        exch_streams = shardexec.exchange_streams(exch, layout)
+        if exch.overlap:
+            mix_inflight = shardexec.mix_streams(exch)
+            encode_streams = shardexec.encode_streams(exch, layout)
+        else:
+            exch_streams = shardexec.exchange_streams(exch, layout)
         gsq_groups = shardexec.sq_norm_groups(use_pallas)
         consensus_groups = shardexec.consensus_sq_groups(use_pallas)
     else:
         opt_step = (jax.vmap(opt.step) if per_group_count else opt.step)
-        exch_streams = exch.streams
+        if exch.overlap:
+            mix_inflight = exch.mix_inflight
+            encode_streams = exch.encode_streams
+        else:
+            exch_streams = exch.streams
 
         def gsq_groups(g_G):
             return _grad_sq_norm_groups(g_G, use_pallas)
@@ -522,6 +547,14 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
             xs0.update({k: state_G["opt"][k] for k in mkeys})
         t_vec = (jnp.asarray(cfg.t_i, jnp.int32)
                  if cfg.t_i is not None else None)
+        if exch.overlap:
+            # delayed mixing (DESIGN.md §14): issue the PREVIOUS round's
+            # mixing collective FIRST — it depends only on the in-flight
+            # buffers, not on this round's local steps, so a parallel
+            # backend schedules the two concurrently inside one graph
+            inflight = comm_state["inflight"]
+            with jax.named_scope("exchange"):
+                mixed_inf = mix_inflight(inflight)
 
         traj = cfg.metrics == "traj"
 
@@ -602,9 +635,33 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
         xs.update({k: state_G["opt"][k] for k in mkeys})
         with jax.named_scope("round_metrics"):
             consensus_pre = consensus_groups(state_G["params"])
-        with jax.named_scope("exchange"):
-            mixed, comm_state = exch_streams(xs, xs0, comm_state)
-        mixed = _clamp_nonneg_streams(mixed, opt, exch)
+        if exch.overlap:
+            # delayed mixing, applied one round late: p' = local(p) +
+            # mix(inflight) - inflight. The correction preserves the
+            # G-mean (the mix is doubly stochastic) and contracts the
+            # consensus deviation like the barrier mix does — PROVIDED
+            # the in-flight payload is the ROUND RESULT p' (encoded
+            # below), not the raw local iterate: shipping the local
+            # iterate gives the deviation recursion e' = e - e_prev +
+            # drift, whose characteristic roots sit ON the unit circle
+            # (it oscillates and never converges).
+            with jax.named_scope("apply_inflight"):
+                mixed = {k: xs[k] + (mixed_inf[k] - inflight[k])
+                         for k in xs}
+            mixed = _clamp_nonneg_streams(mixed, opt, exch)
+            # encode this round's result as the next round's in-flight
+            # payload: delta vs the round start (the same codec
+            # reference the barrier path uses, so quantization error
+            # vanishes with convergence)
+            with jax.named_scope("encode_inflight"):
+                new_inflight, comm_state = encode_streams(
+                    mixed, xs0, comm_state)
+            comm_state = dict(comm_state)
+            comm_state["inflight"] = new_inflight
+        else:
+            with jax.named_scope("exchange"):
+                mixed, comm_state = exch_streams(xs, xs0, comm_state)
+            mixed = _clamp_nonneg_streams(mixed, opt, exch)
         new_opt = {k: mixed.get(k, v) for k, v in state_G["opt"].items()}
         metrics.update(_round_wire_bytes(
             exch, state_G["params"], state_G["opt"],

@@ -73,7 +73,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
             staleness: int = 1, impl: str = "auto",
             moment_codec: str = "fp32", downlink_codec: str = "",
             drop_rate: float = 0.0, stall_rate: float = 0.0,
-            fault_seed: int = 0, trace: str = "") -> dict:
+            fault_seed: int = 0, overlap: bool = False,
+            trace: str = "") -> dict:
     import dataclasses as _dc
 
     import jax
@@ -100,7 +101,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, tag: str = "",
               "moment_codec": moment_codec,
               "downlink_codec": downlink_codec,
               "drop_rate": drop_rate, "stall_rate": stall_rate,
-              "fault_seed": fault_seed}
+              "fault_seed": fault_seed, "overlap": overlap}
         if moe_impl:
             kw["moe_impl"] = moe_impl
     elif shape.kind == "prefill":
@@ -256,18 +257,24 @@ def main() -> None:
                     help="exchange topology (repro.comm, DESIGN.md §8; "
                          "push_sum is loss-tolerant ratio consensus)")
     ap.add_argument("--codec", default="fp32",
-                    choices=["fp32", "fp16", "bf16", "int8", "topk"],
-                    help="wire codec; int8/topk need --packed")
+                    choices=["fp32", "fp16", "bf16", "int8", "int8z",
+                             "topk"],
+                    help="wire codec; int8/int8z/topk need --packed")
     ap.add_argument("--moment-codec", default="fp32",
-                    choices=["fp32", "fp16", "bf16", "int8"],
+                    choices=["fp32", "fp16", "bf16", "int8", "int8z"],
                     help="wire codec for the optimizer moment streams "
                          "(DESIGN.md §10); meta reports per-stream "
                          "wire_bytes_per_round_by_stream")
     ap.add_argument("--downlink-codec", default="",
-                    choices=["", "fp32", "fp16", "bf16", "int8"],
+                    choices=["", "fp32", "fp16", "bf16", "int8", "int8z"],
                     help="compress the server/async broadcast reply "
                          "independently of the uplink (DESIGN.md §11); "
                          "wire_bytes_down_per_round prices it")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered delayed mixing (DESIGN.md §14): "
+                         "records the overlapped round's collective "
+                         "profile (encode+mix scheduled beside the local "
+                         "steps in one graph); needs --packed")
     ap.add_argument("--mix-rounds", type=int, default=1,
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
@@ -327,6 +334,8 @@ def main() -> None:
             extra += ["--stall-rate", str(args.stall_rate)]
         if args.fault_seed:
             extra += ["--fault-seed", str(args.fault_seed)]
+        if args.overlap:
+            extra += ["--overlap"]
         if args.impl != "auto":
             extra += ["--impl", args.impl]
         sys.exit(1 if drive_all(args.multi_pod, args.tag, args.force,
@@ -346,7 +355,8 @@ def main() -> None:
                       downlink_codec=args.downlink_codec,
                       drop_rate=args.drop_rate,
                       stall_rate=args.stall_rate,
-                      fault_seed=args.fault_seed, trace=args.trace)
+                      fault_seed=args.fault_seed, overlap=args.overlap,
+                      trace=args.trace)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape, "status": "error",
                "error": traceback.format_exc()[-4000:], "tag": args.tag}

@@ -147,7 +147,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      impl: str = "auto", moment_codec: str = "fp32",
                      downlink_codec: str = "", drop_rate: float = 0.0,
                      stall_rate: float = 0.0,
-                     fault_seed: int = 0) -> BuiltStep:
+                     fault_seed: int = 0,
+                     overlap: bool = False) -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
     on an fsdp mesh (params additionally sharded over "fsdp").
@@ -172,7 +173,7 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     "auto" (pallas where supported, else jnp)."""
     if mode == "sync" and (comm != "server" or codec != "fp32"
                            or moment_codec != "fp32" or downlink_codec
-                           or drop_rate or stall_rate):
+                           or drop_rate or stall_rate or overlap):
         raise ValueError(
             "comm/codec/fault flags select the local-SGD model exchange; "
             "sync-DP all-reduces gradients every step and has no "
@@ -211,7 +212,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                         lr, mode, t_inner, comm, codec,
                                         mix_rounds, staleness, impl,
                                         moment_codec, downlink_codec,
-                                        drop_rate, stall_rate, fault_seed)
+                                        drop_rate, stall_rate, fault_seed,
+                                        overlap)
     if impl != "auto":
         # same no-silent-fallback rule as optim.get: the pytree round has
         # no fused-kernel path for impl to select
@@ -249,7 +251,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                         downlink_codec=downlink_codec,
                                         drop_rate=drop_rate,
                                         stall_rate=stall_rate,
-                                        fault_seed=fault_seed)
+                                        fault_seed=fault_seed,
+                                        overlap=overlap)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -295,6 +298,7 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "tokens": shape.global_batch * shape.seq_len * t_inner,
          "t_inner": t_inner, "policy": policy,
          "param_dtype": cfg.param_dtype, "comm": exchange.name,
+         "overlap": exchange.overlap,
          "wire_bytes_per_round": exchange.wire_bytes_per_round(
              n_p, moment_sizes=moment_sizes),
          "wire_bytes_up_per_round": exchange.wire_bytes_up(
@@ -335,7 +339,8 @@ def _build_exchange(comm: str, codec: str, n_groups: int,
                     mix_rounds: int = 1, staleness: int = 1,
                     impl: str = "jnp", moment_codec: str = "fp32",
                     downlink_codec: str = "", drop_rate: float = 0.0,
-                    stall_rate: float = 0.0, fault_seed: int = 0):
+                    stall_rate: float = 0.0, fault_seed: int = 0,
+                    overlap: bool = False):
     """Exchange for a mesh step builder; ``impl`` selects the codec
     kernels and must already be resolved for the execution path
     (``_packed_impl`` — shard_map runs the Pallas quantize kernels on
@@ -352,7 +357,8 @@ def _build_exchange(comm: str, codec: str, n_groups: int,
                                      downlink_codec=downlink_codec,
                                      drop_rate=drop_rate,
                                      stall_rate=stall_rate,
-                                     fault_seed=fault_seed)
+                                     fault_seed=fault_seed,
+                                     overlap=overlap)
     return exchange, exchange.supports_opt_state_averaging
 
 
@@ -387,6 +393,11 @@ def _add_comm_state(exchange, params_G, state_abs, sspecs, dp, G,
         if k == "pushed":
             return param_specs
         if k == "pushed_opt":
+            return {name: param_specs for name in v}
+        if k == "inflight":
+            # the double-buffered in-flight payload mirrors each stream's
+            # geometry exactly (DESIGN.md §14) — params' own specs, same
+            # rule as the staleness buffers
             return {name: param_specs for name in v}
         if k == "backlog":
             return {name: _lead_offset(param_specs) for name in v}
@@ -426,7 +437,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                              downlink_codec: str = "",
                              drop_rate: float = 0.0,
                              stall_rate: float = 0.0,
-                             fault_seed: int = 0) -> BuiltStep:
+                             fault_seed: int = 0,
+                             overlap: bool = False) -> BuiltStep:
     """Flat-buffer train step (DESIGN.md §6/§9): one (G, Np) f32 buffer
     per state part, donated so XLA updates the model in place across the
     T-step round. When the mesh has an in-group axis ("model"/"fsdp" > 1)
@@ -471,7 +483,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                         downlink_codec=downlink_codec,
                                         drop_rate=drop_rate,
                                         stall_rate=stall_rate,
-                                        fault_seed=fault_seed)
+                                        fault_seed=fault_seed,
+                                        overlap=overlap)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -507,7 +520,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "sharded": sexec is not None,
          "n_shards": sexec.n_shards if sexec is not None else 1,
          "impl": impl, "param_dtype": cfg.param_dtype,
-         "comm": exchange.name, "streams": list(slayout.streams),
+         "comm": exchange.name, "overlap": exchange.overlap,
+         "streams": list(slayout.streams),
          # packed rounds exchange every moment stream through its own
          # codec but never the shared step counter (mirrors
          # _round_wire_bytes); totals == sums of the per-stream splits

@@ -21,7 +21,7 @@ from repro import optim
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import get_config
 from repro.core import localsgd as lsgd
-from repro.core.controller import AdaptiveT
+from repro.core.controller import AdaptiveT, OnlineT
 from repro.data.synthetic import TokenPipeline
 from repro.models import build_model
 from repro.optim import packing
@@ -37,6 +37,42 @@ def add_modalities(batch, cfg, rng):
             *batch["tokens"].shape[:-1], cfg.n_frames, cfg.d_model)
             .astype(np.float32))
     return batch
+
+
+def calibrate_fences(loss_fn, opt, lcfg, layout, exchange, sexec, params,
+                     batch, n_groups):
+    """Measure the two references ``obs.exchange_phases`` derives the
+    honest exchange-time split from (DESIGN.md §14): the SAME round
+    built with comm='none' gives the pure-local-compute time, and (in
+    overlap mode) the barrier variant of the same exchange gives the
+    standalone exchange cost — both fenced, best of two runs after a
+    warmup. Returns ``(local_ref_per_step_s, exch_ref_s)``; the local
+    reference scales linearly in T when the controller later changes it,
+    so one calibration covers the whole run."""
+
+    def best_round_s(exch):
+        rnd = jax.jit(lsgd.make_local_round(loss_fn, opt, lcfg,
+                                            layout=layout, exchange=exch,
+                                            shardexec=sexec))
+        st = lsgd.init_state(params, opt, n_groups=n_groups,
+                             layout=layout, exchange=exch)
+        st, m = rnd(st, batch)
+        jax.block_until_ready(m)
+        best = float("inf")
+        for _ in range(2):
+            with obs.PhaseTimer() as t:
+                st, m = t(rnd(st, batch))
+            best = min(best, t.seconds)
+        return best
+
+    local_ref_s = best_round_s(comm_mod.get_exchange("none", "fp32",
+                                                     n_groups))
+    exch_ref_s = 0.0
+    if exchange.overlap:
+        import dataclasses
+        barrier = dataclasses.replace(exchange, overlap=False)
+        exch_ref_s = max(0.0, best_round_s(barrier) - local_ref_s)
+    return local_ref_s / max(lcfg.inner_steps, 1), exch_ref_s
 
 
 def main() -> None:
@@ -55,10 +91,17 @@ def main() -> None:
                          "e.g. --t-i 1,4,8,16; max becomes the scan bound")
     ap.add_argument("--threshold", type=float, default=None,
                     help="T_i=inf mode: local steps until ||g||^2<=eps")
-    ap.add_argument("--adaptive-t", action="store_true",
-                    help="Sec-4 controller: set T from detected decay")
+    ap.add_argument("--adaptive-t", nargs="?", const="static", default="",
+                    choices=["static", "online"],
+                    help="T controller: 'static' (bare --adaptive-t, the "
+                         "Sec-4 fit from the decay trajectory alone) or "
+                         "'online' (DESIGN.md §14: re-estimates the cost "
+                         "ratio from fenced phase times and scales T by "
+                         "the measured consensus contraction each round)")
     ap.add_argument("--cost-ratio", type=float, default=0.01,
-                    help="r = C_g/C_c for the adaptive controller")
+                    help="r = C_g/C_c for the adaptive controller "
+                         "(online mode uses it as the prior and refines "
+                         "it from measured phase times)")
     ap.add_argument("--opt", default="sgd")
     ap.add_argument("--packed", action="store_true",
                     help="flat-buffer fast path: fused whole-model updates"
@@ -82,17 +125,20 @@ def main() -> None:
                          "push_sum is loss-tolerant ratio consensus, "
                          "DESIGN.md §12)")
     ap.add_argument("--codec", default="fp32",
-                    choices=["fp32", "fp16", "bf16", "int8", "topk"],
-                    help="wire codec for the model exchange; int8/topk "
-                         "need --packed (the flat buffer is the wire "
-                         "format)")
+                    choices=["fp32", "fp16", "bf16", "int8", "int8z",
+                             "topk"],
+                    help="wire codec for the model exchange; int8/int8z/"
+                         "topk need --packed (the flat buffer is the "
+                         "wire format)")
     ap.add_argument("--moment-codec", default="fp32",
-                    choices=["fp32", "fp16", "bf16", "int8"],
+                    choices=["fp32", "fp16", "bf16", "int8", "int8z"],
                     help="wire codec for the optimizer moment streams "
-                         "(DESIGN.md §10); int8 needs --packed, topk is "
-                         "refused for moments")
+                         "(DESIGN.md §10); int8/int8z need --packed, "
+                         "topk is refused for moments; int8z is the "
+                         "zero-preserving moment-friendly variant "
+                         "(DESIGN.md §10/§14)")
     ap.add_argument("--downlink-codec", default="",
-                    choices=["", "fp32", "fp16", "bf16", "int8"],
+                    choices=["", "fp32", "fp16", "bf16", "int8", "int8z"],
                     help="compress the server/async broadcast reply "
                          "independently of the uplink codec (DESIGN.md "
                          "§11); default: idealized broadcast priced at "
@@ -102,6 +148,11 @@ def main() -> None:
                     help="sharded ring/gossip hop collective (DESIGN.md "
                          "§11): ppermute neighbor exchange (O(deg*shard) "
                          "wire) or the dense all_gather reference")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered delayed mixing (DESIGN.md "
+                         "§14): the previous round's payload mixes while "
+                         "this round's local steps run; needs --packed "
+                         "and a server/ring/gossip topology")
     ap.add_argument("--mix-rounds", type=int, default=1,
                     help="mixing hops per round (ring/gossip)")
     ap.add_argument("--staleness", type=int, default=1,
@@ -132,7 +183,7 @@ def main() -> None:
     if args.mode == "sync" and (args.comm != "server"
                                 or args.codec != "fp32"
                                 or args.moment_codec != "fp32"
-                                or args.downlink_codec
+                                or args.downlink_codec or args.overlap
                                 or args.drop_rate or args.stall_rate):
         ap.error("--comm/--codec/--drop-rate select the local-SGD model "
                  "exchange; sync-DP all-reduces gradients every step and "
@@ -142,6 +193,9 @@ def main() -> None:
     if args.shard > 1 and not (args.packed and args.mode == "localsgd"):
         ap.error("--shard shards the packed flat buffer over a mesh; it "
                  "needs --packed and --mode localsgd")
+    if args.overlap and not args.packed:
+        ap.error("--overlap double-buffers the packed flat stream payload "
+                 "(comm['inflight'], DESIGN.md §14); add --packed")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -159,6 +213,7 @@ def main() -> None:
         "t_inner": args.t_inner, "comm": args.comm, "codec": args.codec,
         "rounds": args.rounds, "n_params": n_params,
         "packed": bool(args.packed), "shard": args.shard,
+        "overlap": bool(args.overlap), "adaptive_t": args.adaptive_t,
         "drop_rate": args.drop_rate, "stall_rate": args.stall_rate})
 
     layout = packing.layout_of(params) if args.packed else None
@@ -224,7 +279,7 @@ def main() -> None:
             moment_codec=args.moment_codec,
             downlink_codec=args.downlink_codec,
             drop_rate=args.drop_rate, stall_rate=args.stall_rate,
-            fault_seed=args.fault_seed)
+            fault_seed=args.fault_seed, overlap=args.overlap)
         # every topology averages opt state now that the per-stream
         # staleness buffers exist (DESIGN.md §10)
         avg_opt = exchange.supports_opt_state_averaging
@@ -257,10 +312,21 @@ def main() -> None:
         # worth of link time (AdaptiveT.from_exchange's delivery_rate
         # repricing): comm is 1/delivery more expensive, so r shrinks
         # and the controller pushes T* up — fewer, longer rounds
-        ctl = (AdaptiveT(r=args.cost_ratio * exchange.delivery_rate)
-               if args.adaptive_t else None)
+        ctl = None
+        if args.adaptive_t == "online":
+            # DESIGN.md §14: the prior r is refined online from the
+            # calibrated fences; the delivery repricing still applies
+            ctl = OnlineT(r=args.cost_ratio * exchange.delivery_rate)
+        elif args.adaptive_t:
+            ctl = AdaptiveT(r=args.cost_ratio * exchange.delivery_rate)
         t_cur = args.t_inner
         wire_total = 0
+        # the exchange-time split needs the packed path's uniform round
+        # shape to calibrate against; pytree rounds skip it (the
+        # report's phase gate is conditional on the keys being present)
+        calibrate = args.packed and (args.overlap or bool(args.trace)
+                                     or args.adaptive_t == "online")
+        local_ref_step = exch_ref_s = 0.0
         trace.meta.update({"comm": exchange.name,
                            "delivery_rate": exchange.delivery_rate})
         with obs.profile_span(args.profile):
@@ -269,6 +335,10 @@ def main() -> None:
                     batch = add_modalities(
                         {"tokens": jnp.asarray(next(batches)["tokens"])},
                         cfg, rng)
+                if calibrate and n == 0:
+                    local_ref_step, exch_ref_s = calibrate_fences(
+                        model.loss, opt, lcfg, layout, exchange, sexec,
+                        params, batch, G)
                 if ctl is not None and t_cur != lcfg.inner_steps:
                     lcfg = lsgd.LocalSGDConfig(
                         n_groups=G, inner_steps=t_cur, max_inner=500,
@@ -279,8 +349,33 @@ def main() -> None:
                         donate_argnums=(0,))
                 with trace.phase("round") as f:
                     state, m = f(rnd(state, batch))
+                t_used = int(jnp.max(m["inner_steps"]))
+                fences = None
+                if calibrate:
+                    fences = obs.exchange_phases(
+                        trace.phase_seconds("round"),
+                        local_ref_step * t_used, exch_ref_s,
+                        overlap=args.overlap)
+                    for k, v in fences.items():
+                        trace.add_phase(k, v)
                 if ctl is not None and "grad_sq_traj" in m:
-                    t_cur = ctl.update(np.asarray(m["grad_sq_traj"])[0])
+                    traj = np.asarray(m["grad_sq_traj"])[0]
+                    if isinstance(ctl, OnlineT):
+                        cerr = sum(float(jnp.mean(v))
+                                   for k, v in m.items()
+                                   if k.startswith("codec_err/"))
+                        t_cur = ctl.update(
+                            traj, t_used=t_used,
+                            local_s=(local_ref_step * t_used) or None,
+                            exchange_s=(fences or {}).get(
+                                "exchange_total") or None,
+                            consensus_pre=float(
+                                jnp.mean(m["consensus_sq"])),
+                            consensus_post=float(
+                                jnp.mean(m["consensus_sq_post"])),
+                            codec_err=cerr)
+                    else:
+                        t_cur = ctl.update(traj)
                 rec = trace.emit_round(n, m)
                 wire_total += int(m["wire_bytes"])
                 if n % args.log_every == 0:

@@ -14,8 +14,8 @@ Three layers, one schema:
 * reporting — ``repro.obs.report`` summarizes/validates a trace file;
   the benchmarks route their timing through the same sink.
 """
-from repro.obs.trace import (PhaseTimer, Trace, profile_span,  # noqa: F401
-                             to_jsonable)
+from repro.obs.trace import (PhaseTimer, Trace, exchange_phases,  # noqa: F401
+                             profile_span, to_jsonable)
 
 # bump when the JSONL record layout changes incompatibly; report.py
 # refuses to --check traces from a different major schema
@@ -33,8 +33,12 @@ ROUND_KEYS = (
 )
 
 # host-measured phase names the launchers emit (checkpoint only appears
-# on rounds that save one)
-PHASES = ("data", "round", "step", "checkpoint")
+# on rounds that save one; the exchange_* pair appears on calibrated
+# localsgd runs — trace.exchange_phases, DESIGN.md §14: "exposed" is the
+# exchange time on the round's critical path, "total" what the exchange
+# costs standalone; overlap efficiency = 1 - exposed/total)
+PHASES = ("data", "round", "step", "checkpoint",
+          "exchange_exposed", "exchange_total")
 
 
 def round_metric_keys(streams=("params",)):

@@ -70,6 +70,29 @@ def check(meta: dict, records: List[dict]) -> List[str]:
         if not ph or any(v < 0 for v in ph.values()):
             problems.append(f"round {r.get('round')}: bad phase_s {ph}")
             break
+    overlap_meta = bool(meta.get("overlap"))
+    for r in rounds:
+        ph = r.get("phase_s", {})
+        has = {"exchange_exposed" in ph, "exchange_total" in ph}
+        if has == {True, False}:
+            problems.append(
+                f"round {r.get('round')}: exchange_exposed/exchange_total "
+                "must appear together (obs.exchange_phases emits the "
+                f"pair) — got {sorted(ph)}")
+            break
+        if overlap_meta and has == {False}:
+            problems.append(
+                f"round {r.get('round')}: overlap run without the "
+                "exchange_exposed/exchange_total phase split — the "
+                "overlap win is unmeasured (DESIGN.md §14)")
+            break
+        if (True in has
+                and ph["exchange_exposed"] > ph["exchange_total"] + 1e-9):
+            problems.append(
+                f"round {r.get('round')}: exchange_exposed "
+                f"{ph['exchange_exposed']} > exchange_total "
+                f"{ph['exchange_total']} (total is floored at exposed)")
+            break
     for r in rounds:
         m = r.get("metrics", {})
         split = sum(v for k, v in m.items()
@@ -114,6 +137,15 @@ def summarize(meta: dict, records: List[dict]) -> dict:
         k: {"p50": _pct(v, 50), "p99": _pct(v, 99),
             "total": float(np.sum(v)), "n": len(v)}
         for k, v in phases.items()}
+    if "exchange_exposed" in phases and "exchange_total" in phases:
+        exposed = float(np.sum(phases["exchange_exposed"]))
+        total = float(np.sum(phases["exchange_total"]))
+        # 1 - exposed/total: the fraction of exchange time the overlap
+        # actually hid behind local compute (DESIGN.md §14); 0 on barrier
+        # rounds (exposed == total by construction) and honestly ≈ 0 on
+        # serial single-core backends
+        out["overlap_efficiency"] = (1.0 - exposed / total
+                                     if total > 0.0 else 0.0)
     wire = {}
     for r in rounds:
         for k, v in r.get("metrics", {}).items():
@@ -174,6 +206,9 @@ def main(argv=None) -> int:
         per = ", ".join(f"{k}={v:,}B"
                         for k, v in s["wire_bytes_by_stream"].items())
         print(f"  wire  total {tot:,}B  ({per})")
+    if "overlap_efficiency" in s:
+        print(f"  overlap efficiency (1 - exposed/total exchange) "
+              f"{s['overlap_efficiency']:.3f}")
     if "consensus_sq" in s:
         c = s["consensus_sq"]
         print(f"  consensus ||x_g - mean||^2: first {c['first']:.3e}  "

@@ -112,6 +112,14 @@ class Trace:
         """Accumulated seconds of ``name`` since the last emit."""
         return self._phases.get(name, 0.0)
 
+    def add_phase(self, name: str, seconds: float) -> None:
+        """Record a DERIVED phase duration (e.g. the calibrated
+        ``exchange_exposed``/``exchange_total`` split, DESIGN.md §14) so
+        it rides the next ``emit_round`` like a fenced phase. Only for
+        values computed FROM fenced measurements — raw ``time.time``
+        deltas around jitted calls stay lies."""
+        self._phases[name] = self._phases.get(name, 0.0) + float(seconds)
+
     def take_phases(self) -> Dict[str, float]:
         out, self._phases = self._phases, {}
         return out
@@ -163,6 +171,33 @@ class Trace:
     def __exit__(self, *exc):
         self.close()
         return False
+
+
+def exchange_phases(round_s: float, local_ref_s: float, exch_ref_s: float,
+                    *, overlap: bool) -> Dict[str, float]:
+    """The honest exchange-time split (DESIGN.md §14).
+
+    Intra-graph fences cannot separate overlapped phases (XLA schedules
+    them concurrently; on a serial CPU backend dispatch order would be
+    reported as if it were concurrency). Instead the launcher calibrates
+    two references ONCE — ``local_ref_s``: the same round built with
+    comm='none' (pure local compute), ``exch_ref_s``: the exchange ops
+    jitted standalone — and derives per round:
+
+      exchange_exposed = max(0, round_s - local_ref_s)
+          the exchange time actually ON the critical path this round;
+      exchange_total   = the standalone exchange cost (overlap mode,
+          floored at exposed so noise never reports >100% hiding), or
+          == exposed for a barrier round (nothing is hidden by
+          construction).
+
+    Overlap efficiency = 1 - exposed/total. On a single-core host the
+    backend executes serially, exposed ≈ total, and the efficiency is
+    honestly ≈ 0 — the hiding is real only where the backend can run
+    collectives concurrently with compute."""
+    exposed = max(0.0, float(round_s) - float(local_ref_s))
+    total = max(float(exch_ref_s), exposed) if overlap else exposed
+    return {"exchange_exposed": exposed, "exchange_total": total}
 
 
 @contextlib.contextmanager

@@ -223,6 +223,20 @@ class ShardExec:
         return shard_map(local, mesh=self.mesh, in_specs=(spec,),
                          out_specs=spec, check_rep=False)
 
+    def mix_streams(self, exch):
+        """``Exchange.mix_inflight`` on sharded buffers (overlap mode,
+        DESIGN.md §14): the codec-free mix of the previous round's
+        in-flight payload, one ``mix`` application per stream. This is
+        the collective the overlap round issues BEFORE its local-step
+        block."""
+        one = self.mix(exch)
+
+        def fn(inflight: dict) -> dict:
+            with jax.named_scope("mix_inflight"):
+                return {k: one(v) for k, v in inflight.items()}
+
+        return fn
+
     def _hop_fn(self, w_np, gax):
         """Build the one-W-hop closure for a local (1, shard) block, or
         None for mean topologies (no W).
@@ -707,6 +721,120 @@ class ShardExec:
             new_state["round"] = rnd + 1
             new_state["participation"] = jnp.mean(masks)
             return dict(zip(names, mixed_t)), new_state
+
+        return fn
+
+    def encode_streams(self, exch, layout: packing.Layout):
+        """shard_map'd ``Exchange.encode_streams`` (overlap mode,
+        DESIGN.md §14): codec-encode every stream ONCE on its local
+        (1, shard) block — no mixing, no group-axis collectives —
+        producing the decoded payload the overlap round puts in flight.
+        Codec handling matches ``exchange_streams``: int8-family noise
+        is generated OUTSIDE the block at the full rows shape (each
+        device consumes its slice — bit-identical to the replicated
+        encode); topk uses the distributed threshold selection with its
+        shard-local EF residual (psum'd bisection over the shard axes
+        only — mechanism kept intact although ``get_exchange`` refuses
+        overlap x topk as unstable, DESIGN.md §14 refusal matrix).
+        Returns ``fn(xs, xs0, comm_state) -> (x_hat,
+        new_comm_state)``."""
+        for c in (exch.codec, exch.mcodec):
+            if not (c.shardable or c.identity):
+                raise NotImplementedError(
+                    f"codec {c.name!r} is not shardable — run it on the "
+                    "replicated path (DESIGN.md §9)")
+            if (not c.identity) and c.chunk > 0:
+                self.check_layout(layout, c.chunk)
+        self.check_layout(layout)
+        spec = self.buf_spec()
+        gax = self._entry(self.group_axes)
+        sax = self._entry(self.shard_axes)
+        G = self.n_groups
+        shard_size = layout.shard_size
+        dummy_spec = P(None, None)
+
+        def compress_local(codec, y, ref, u):
+            d = y - ref
+            if codec.chunk > 0:
+                rows = d.reshape(-1, codec.chunk)
+                out = codec.compress_rows(rows, u.reshape(rows.shape))
+                return ref + out.reshape(d.shape)
+            d_hat, _ = codec.compress(d, {})
+            return ref + d_hat
+
+        def fn(xs, xs0, comm_state):
+            names = tuple(xs)
+            codecs = {k: exch.stream_codec(k) for k in names}
+            lossy = {k: not codecs[k].identity for k in names}
+            chunked = {k: lossy[k] and codecs[k].chunk > 0 for k in names}
+            selective = {k: lossy[k] and codecs[k].topk_frac > 0
+                         for k in names}
+            k_sel = {k: max(1, int(round(codecs[k].topk_frac
+                                         * layout.padded)))
+                     for k in names if selective[k]}
+            new_state = dict(comm_state)
+            cstates = dict(comm_state.get("codec", {}))
+
+            def local(xs_t, x0s_t, us_t, res_t):
+                outs, new_res = [], []
+                for i, k in enumerate(names):
+                    codec, x, x0 = codecs[k], xs_t[i], x0s_t[i]
+                    res = res_t[i]
+                    if selective[k]:
+                        c = (x - x0) + res
+                        tau = self._topk_threshold(
+                            jnp.abs(c)[0], k_sel[k], sax, shard_size)
+                        d_hat, res = self._topk_select(c, tau)
+                        y = x0 + d_hat
+                    elif lossy[k]:
+                        y = compress_local(codec, x, x0,
+                                           us_t[i] if chunked[k]
+                                           else None)
+                    else:
+                        y = x
+                    outs.append(y)
+                    new_res.append(res)
+                return tuple(outs), tuple(new_res)
+
+            dummy = jnp.zeros((1, 1), jnp.float32)
+            us, us_specs = [], []
+            for k in names:
+                if not chunked[k]:
+                    us.append(dummy)
+                    us_specs.append(dummy_spec)
+                    continue
+                chunk = codecs[k].chunk
+                cnt = comm_state["codec"][k]["count"]
+                rows_shape = (G * layout.padded // chunk, chunk)
+                us.append(codecs[k].noise(cnt, rows_shape)
+                          .reshape(G, -1, chunk))
+                us_specs.append(P(gax, sax, None))
+                cstates[k] = {"count": cnt + 1}
+            res, res_specs = [], []
+            for k in names:
+                if not selective[k]:
+                    res.append(dummy)
+                    res_specs.append(dummy_spec)
+                    continue
+                res.append(comm_state["codec"][k]["residual"])
+                res_specs.append(spec)
+            x0s = tuple(xs0.get(k, xs[k]) for k in names)  # dummy when
+            # the stream is not lossy (never read inside the block)
+            f = shard_map(local, mesh=self.mesh,
+                          in_specs=((spec,) * len(names),
+                                    (spec,) * len(names),
+                                    tuple(us_specs), tuple(res_specs)),
+                          out_specs=((spec,) * len(names),
+                                     tuple(res_specs)),
+                          check_rep=False)
+            out_t, new_res = f(tuple(xs[k] for k in names), x0s,
+                               tuple(us), tuple(res))
+            for i, k in enumerate(names):
+                if selective[k]:
+                    cstates[k] = {"residual": new_res[i]}
+            if any(chunked.values()) or any(selective.values()):
+                new_state["codec"] = cstates
+            return dict(zip(names, out_t)), new_state
 
         return fn
 
