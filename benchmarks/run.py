@@ -23,7 +23,7 @@ from benchmarks import (ablation_opt_state, comm_bytes, comm_reduction,
                         fault_tolerance, fig2a_feasibility,
                         fig2b_linear_rate, fig3_intersection, fig4_deepnet,
                         fig5_quartic, fig67_nodes, overlap,
-                        roofline_report, round_throughput)
+                        roofline_report, round_throughput, serve_latency)
 
 BENCHES = [
     ("fig2a_feasibility", fig2a_feasibility.main,
@@ -75,6 +75,14 @@ BENCHES = [
                "online-T wire ratio={:.2f}x (bar 1)".format(
                    r["headline_online_t"]
                    ["wire_ratio_static_over_online"])),
+    ("serve_latency", serve_latency.main,
+     lambda r: "continuous/static tok/s="
+               f"{r['headline']['tokens_per_s_ratio']:.2f}x (bar 1.1) "
+               "p99 ratio="
+               f"{r['headline']['p99_ratio_static_over_continuous']:.2f}x"
+               " (bar 1.3) parity="
+               + ("ok" if r["token_parity_static_vs_continuous"]
+                  else "FAIL")),
 ]
 
 
@@ -103,6 +111,10 @@ HEADLINE_BARS = {
         ("headline", "modeled_speedup_T4", "bar"),
         ("headline_online_t", "wire_ratio_static_over_online", "bar"),
     ],
+    "BENCH_serve.json": [
+        ("headline", "tokens_per_s_ratio", "bar"),
+        ("headline", "p99_ratio_static_over_continuous", "p99_bar"),
+    ],
 }
 
 # fresh smoke re-runs: (name, script, env toggles). Each script exits
@@ -115,6 +127,7 @@ SMOKE_RUNS = [
     ("fault_tolerance", "benchmarks/fault_tolerance.py",
      {"FAULT_SMOKE": "1"}),
     ("overlap", "benchmarks/overlap.py", {"OVERLAP_SMOKE": "1"}),
+    ("serve_latency", "benchmarks/serve_latency.py", {"SERVE_SMOKE": "1"}),
 ]
 
 

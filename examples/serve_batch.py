@@ -1,6 +1,7 @@
-"""Batched-serving example: greedy-decode 4 concurrent requests on a
-reduced hybrid (Mamba2 + shared-attention) model — exercising the O(1)
-recurrent-state cache path used by the long_500k dry-run shape.
+"""Batched-serving example: the continuous-batching engine over Poisson
+arrivals on a reduced hybrid (Mamba2 + shared-attention) model and a
+reduced dense GQA model — exercising the paged KV + O(1) recurrent-state
+cache paths, with per-request parity checked against isolated decode.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
@@ -9,17 +10,21 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+from common import child_env  # noqa: E402
 
 
 def main():
     for arch in ("zamba2-7b", "qwen3-32b"):
-        print(f"=== {arch} (reduced) ===")
+        print(f"=== {arch} (reduced, continuous batching) ===")
         subprocess.run(
             [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
-             "--reduced", "--batch", "4", "--prompt-len", "12",
-             "--gen", "12"],
-            cwd=str(ROOT), check=True,
-            env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin"})
+             "--reduced", "--engine", "continuous", "--slots", "3",
+             "--page-size", "4", "--requests", "6", "--rate", "8",
+             "--prompt-max", "12", "--gen", "4", "--gen-max", "8",
+             "--check-parity"],
+            cwd=str(ROOT), check=True, env=child_env())
 
 
 if __name__ == "__main__":

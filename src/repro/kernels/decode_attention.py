@@ -1,0 +1,204 @@
+"""Pallas TPU paged decode attention (single-token q, GQA, online softmax
+over KV pages).
+
+The serve engine (repro.serve) stores the KV cache as PAGES: rows of one
+flat f32 pool ``(n_pages, page_elems)``, where a page holds ``page_size``
+tokens x ``n_kv`` heads x ``head_dim`` (plus chunk-alignment padding).
+Per-slot page tables map block j of request b to pool rows
+``rows_k[b, j]`` / ``rows_v[b, j]``. This kernel computes one decode
+step's attention for the whole batch directly against those pages.
+
+Schedule: grid ``(B, nblk)`` with the page index innermost (sequential on
+TPU), VMEM scratch (m, l, acc) carrying the online softmax across pages —
+the decode-shaped sibling of ``flash_attention`` (same scratch dance,
+q-block = one token). The page tables and lengths ride
+``PrefetchScalarGridSpec`` scalar prefetch, so the BlockSpec index_map
+DMAs exactly the page each grid step owns: block j of batch b streams
+pool row ``rows_k[b, j]`` into VMEM — gathers never materialize.
+
+Bit-identity contract: ``paged_decode_attention`` in interpret mode and
+``paged_decode_attention_ref`` agree BIT-FOR-BIT (the parity tests assert
+exact equality), which takes three deliberate choices shared via
+``_cell_update``:
+
+1. Every float sum (scores, p@v, sum(p)) goes through
+   ``lax.dot_general`` — a library call XLA cannot re-associate. A plain
+   ``jnp.sum`` is re-tiled per fusion context: the same reduction
+   compiled inside the pallas grid body vs. inside a ``lax.scan`` body
+   rounds differently (~1 ulp, data-dependent), and
+   ``optimization_barrier`` does not stop it.
+2. The online-softmax accumulates ``l*corr + sum(p)`` and
+   ``acc*corr + pv`` add through ``_pair_add`` (stack the two addends,
+   contract with ones(2)) so neither program can FMA-contract the
+   multiply into the add.
+3. The reference runs per batch row (``lax.map``) with exactly the
+   kernel's cell shapes, and mirrors the kernel's past-length block skip
+   with a ``where`` on the scan carry — processing a fully-masked block
+   is NOT bit-transparent, so the ref must skip precisely the blocks the
+   kernel's ``pl.when`` skips.
+
+The contract is validated in interpret mode (the only mode this
+container can run); on real TPU hardware the compiled kernel's rounding
+is hardware-specific and only the allclose tests apply.
+
+Inactive slots are routed to the reserved trash page (row 0) with
+length 1 by the engine: they compute finite garbage that never crosses
+slots (every op here is batch-elementwise over b).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pair_add(a, b):
+    """``a + b`` with the add forced through dot_general so it cannot be
+    FMA-contracted with whatever produced ``a`` or ``b``."""
+    t = jnp.stack([a, b], axis=-1)
+    return jax.lax.dot_general(
+        t, jnp.ones((2,), jnp.float32), (((t.ndim - 1,), (0,)), ((), ())))
+
+
+def _cell_update(q, k, v, cols, length, m_prev, l_prev, acc, scale):
+    """One page of online softmax on kernel-cell shapes: q (KV, G, hd),
+    k/v (page, KV, hd) token-major, cols (page,) absolute positions,
+    length scalar. Returns updated (m, l, acc). Shared verbatim by the
+    kernel body and the reference — see the module docstring for why
+    every reduction is a dot_general."""
+    kt = jnp.moveaxis(k, 0, 1)                     # (KV, page, hd)
+    vt = jnp.moveaxis(v, 0, 1)
+    s = jax.lax.dot_general(                       # (KV, G, page)
+        q, kt, (((2,), (2,)), ((0,), (0,)))) * scale
+    s = jnp.where((cols < length)[None, None, :], s, NEG_INF)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    pv = jax.lax.dot_general(                      # (KV, G, hd)
+        p, vt, (((2,), (1,)), ((0,), (0,))))
+    psum = jax.lax.dot_general(
+        p, jnp.ones((p.shape[-1],), jnp.float32), (((2,), (0,)), ((), ())))
+    l_new = _pair_add(l_prev * corr, psum)
+    acc_new = _pair_add(acc * corr[..., None], pv)
+    return m_new, l_new, acc_new
+
+
+def _kernel(rk_ref, rv_ref, len_ref, q_ref, kp_ref, vp_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, page_size, n_kv, g, used, nblk,
+            scale):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # pages fully past the request's length are skipped; block 0 is
+    # always valid (length >= 1), so m stays finite
+    @pl.when(j * page_size < len_ref[b])
+    def _work():
+        hd = used // (page_size * n_kv)
+        q = q_ref[0].astype(jnp.float32).reshape(n_kv, g, hd)
+        k = kp_ref[0, :used].reshape(page_size, n_kv, hd)
+        v = vp_ref[0, :used].reshape(page_size, n_kv, hd)
+        cols = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1)[0]
+        m, l, acc = _cell_update(q, k, v, cols, len_ref[b], m_scr[...],
+                                 l_scr[...], acc_scr[...], scale)
+        m_scr[...] = m
+        l_scr[...] = l
+        acc_scr[...] = acc
+
+    @pl.when(j == nblk - 1)
+    def _finish():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(n_kv * g, -1).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, pool, rows_k, rows_v, lengths, *,
+                           page_size: int, n_kv: int,
+                           interpret: bool = True):
+    """q (B, H, hd); pool (n_pages, page_elems) f32; rows_k/rows_v
+    (B, nblk) int32 pool-row tables; lengths (B,) int32 (>= 1).
+    Returns (B, H, hd) in q.dtype."""
+    B, H, hd = q.shape
+    assert H % n_kv == 0, (H, n_kv)
+    g = H // n_kv
+    nblk = rows_k.shape[1]
+    used = page_size * n_kv * hd
+    assert pool.shape[1] >= used, (pool.shape, used)
+    kernel = functools.partial(
+        _kernel, page_size=page_size, n_kv=n_kv, g=g, used=used,
+        nblk=nblk, scale=1.0 / math.sqrt(hd))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, nblk),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, j, rk, rv, ln: (b, 0, 0)),
+            pl.BlockSpec((1, pool.shape[1]),
+                         lambda b, j, rk, rv, ln: (rk[b, j], 0)),
+            pl.BlockSpec((1, pool.shape[1]),
+                         lambda b, j, rk, rv, ln: (rv[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd),
+                               lambda b, j, rk, rv, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g), jnp.float32),
+            pltpu.VMEM((n_kv, g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(rows_k, rows_v, lengths, q, pool, pool)
+
+
+def paged_decode_attention_ref(q, pool, rows_k, rows_v, lengths, *,
+                               page_size: int, n_kv: int):
+    """Pure-jnp reference, bit-identical to the interpret-mode kernel
+    (same `_cell_update`, per-row lax.map so cell shapes match, skipped
+    blocks masked on the carry — see module docstring). Also the
+    impl='jnp' serve path."""
+    B, H, hd = q.shape
+    g = H // n_kv
+    nblk = rows_k.shape[1]
+    used = page_size * n_kv * hd
+    scale = 1.0 / math.sqrt(hd)
+
+    def one(args):
+        qb, rk, rv, ln = args
+        qf = qb.astype(jnp.float32).reshape(n_kv, g, hd)
+
+        def step(carry, j):
+            m_prev, l_prev, acc = carry
+            k = pool[rk[j], :used].reshape(page_size, n_kv, hd)
+            v = pool[rv[j], :used].reshape(page_size, n_kv, hd)
+            cols = j * page_size + jnp.arange(page_size, dtype=jnp.int32)
+            m, l, a = _cell_update(qf, k, v, cols, ln, m_prev, l_prev,
+                                   acc, scale)
+            valid = j * page_size < ln
+            return (jnp.where(valid, m, m_prev),
+                    jnp.where(valid, l, l_prev),
+                    jnp.where(valid, a, acc)), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            step,
+            (jnp.full((n_kv, g), NEG_INF, jnp.float32),
+             jnp.zeros((n_kv, g), jnp.float32),
+             jnp.zeros((n_kv, g, hd), jnp.float32)),
+            jnp.arange(nblk, dtype=jnp.int32))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(H, hd).astype(qb.dtype)
+
+    return jax.lax.map(one, (q, rows_k, rows_v, lengths))

@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import fused_adamw as _ad
 from repro.kernels import fused_momentum as _mo
@@ -26,6 +27,14 @@ from repro.kernels import use_interpret
 def flash_attention(q, k, v, block_q: int = 128, block_k: int = 128):
     return _fa.flash_attention(q, k, v, block_q=block_q, block_k=block_k,
                                interpret=use_interpret())
+
+
+@partial(jax.jit, static_argnames=("page_size", "n_kv"))
+def paged_decode_attention(q, pool, rows_k, rows_v, lengths,
+                           page_size: int, n_kv: int):
+    return _da.paged_decode_attention(q, pool, rows_k, rows_v, lengths,
+                                      page_size=page_size, n_kv=n_kv,
+                                      interpret=use_interpret())
 
 
 @partial(jax.jit, static_argnames=("eps", "block_rows"))

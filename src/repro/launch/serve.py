@@ -1,33 +1,66 @@
-"""Serving launcher: batched greedy decoding against the KV/state cache.
+"""Serving launcher: the continuous-batching engine (repro.serve) over a
+request workload, with checkpoint->serve handoff.
 
 On this CPU container run reduced configs:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --reduced \
-      --batch 4 --prompt-len 16 --gen 16
-The same decode_step is what the decode_32k / long_500k dry-run shapes
-lower on the production mesh.
+      --requests 8 --rate 4 --gen 8
+Restore trained weights from a ``launch/train.py --checkpoint`` file
+(pytree or packed flat-buffer format):
+  ... --from-checkpoint experiments/ckpt/qwen3
+All timings are phase-fenced (obs.Trace): prefill / decode_step phases
+block_until_ready before reading the clock, and ``--trace`` writes the
+per-step JSONL that ``python -m repro.obs.report <file> --check``
+validates. ``--check-parity`` replays every request through an isolated
+single-slot engine and asserts identical tokens (the CI serve smoke).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import build_model
+from repro.obs.trace import Trace
+from repro.serve import (Engine, EngineConfig, Request, drive_workload,
+                         poisson_workload, restore_params)
+
+
+def build_engine(model, params, args, policy: str,
+                 trace=None) -> Engine:
+    return Engine(model, params, EngineConfig(
+        n_slots=args.slots, page_size=args.page_size,
+        max_prompt=args.prompt_max, max_new=args.gen_max,
+        impl=args.impl, policy=policy), trace=trace)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-32b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--cache-len", type=int, default=0,
-                    help="ring-buffer length (0: prompt+gen)")
+    ap.add_argument("--engine", default="continuous",
+                    choices=("continuous", "static"))
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate (req/s, virtual clock)")
+    ap.add_argument("--prompt-min", type=int, default=4)
+    ap.add_argument("--prompt-max", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8,
+                    help="min generated tokens per request")
+    ap.add_argument("--gen-max", type=int, default=16)
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="decode-attention impl")
+    ap.add_argument("--from-checkpoint", default="",
+                    help="restore params saved by launch/train.py "
+                         "(pytree or packed)")
+    ap.add_argument("--trace", default="", help="JSONL trace sink")
+    ap.add_argument("--check-parity", action="store_true",
+                    help="replay each request isolated; assert identical "
+                         "tokens")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -35,54 +68,56 @@ def main() -> None:
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-
-    B = args.batch
-    W = args.cache_len or (args.prompt_len + args.gen)
-    cache = model.init_cache(B, W)
-    rng = np.random.RandomState(args.seed)
-    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size,
-                                      (B, args.prompt_len), dtype=np.int32))
-
-    step = jax.jit(model.decode_step)
-    # ---- prefill ----------------------------------------------------------
-    # dense/moe families: ONE batched forward fills the cache; recurrent
-    # families (ssm/hybrid) step their O(1) state token-by-token.
-    t0 = time.time()
-    if hasattr(model, "prefill"):
-        pf = jax.jit(model.prefill, static_argnames=("cache_len",))
-        logits, cache = pf(params, {"tokens": prompts}, cache_len=W)
+    if args.from_checkpoint:
+        params = restore_params(args.from_checkpoint, model)
+        print(f"params <- {args.from_checkpoint}.npz")
     else:
-        logits = None
-        for t in range(args.prompt_len):
-            logits, cache = step(params, cache, prompts[:, t:t + 1],
-                                 jnp.asarray(t, jnp.int32))
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+        params = model.init(jax.random.PRNGKey(args.seed))
 
-    # ---- decode: greedy generation ---------------------------------------
-    out_tokens = []
-    tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(
-        jnp.int32)
-    t0 = time.time()
-    for t in range(args.prompt_len, args.prompt_len + args.gen):
-        out_tokens.append(np.asarray(tok[:, 0]))
-        logits, cache = step(params, cache, tok,
-                             jnp.asarray(t, jnp.int32))
-        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1).astype(
-            jnp.int32)
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
+    trace = Trace(args.trace or None,
+                  meta={"launcher": "serve", "arch": cfg.name,
+                        "engine": args.engine, "slots": args.slots,
+                        "page_size": args.page_size})
+    engine = build_engine(model, params, args, args.engine, trace)
+    engine.warmup()
 
-    gen = np.stack(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
-          f"gen={args.gen} cache={W}")
-    print(f"prefill: {t_prefill:.2f}s "
-          f"({B * args.prompt_len / max(t_prefill, 1e-9):.1f} tok/s)")
-    print(f"decode:  {t_decode:.2f}s "
-          f"({B * args.gen / max(t_decode, 1e-9):.1f} tok/s)")
-    for b in range(min(B, 2)):
-        print(f"  seq{b}: {gen[b][:12].tolist()} ...")
+    gen = (min(args.gen, args.gen_max), args.gen_max)
+    reqs = poisson_workload(args.rate, args.requests, seed=args.seed,
+                            prompt_len=(args.prompt_min, args.prompt_max),
+                            max_new=gen, vocab=cfg.vocab_size)
+    done, makespan = drive_workload(
+        engine, [Request(r.rid, r.prompt.copy(), r.max_new, r.arrival)
+                 for r in reqs])
+    trace.close()
+
+    lat = np.sort([c.latency for c in done])
+    committed = sum(len(c.tokens) for c in done)
+    print(f"arch={cfg.name} engine={args.engine} slots={args.slots} "
+          f"page={args.page_size} impl={args.impl}")
+    print(f"{len(done)} requests, {committed} tokens committed in "
+          f"{makespan:.2f}s virtual ({committed / max(makespan, 1e-9):.1f}"
+          " tok/s)")
+    print(f"latency p50 {np.percentile(lat, 50):.3f}s "
+          f"p99 {np.percentile(lat, 99):.3f}s")
+    if args.trace:
+        print(f"trace -> {args.trace} ({trace.n_records} records)")
+
+    if args.check_parity:
+        iso = Engine(model, params, EngineConfig(
+            n_slots=1, page_size=args.page_size, max_prompt=args.prompt_max,
+            max_new=args.gen_max, impl=args.impl))
+        got = {c.rid: c.tokens for c in done}
+        bad = 0
+        for r in reqs:
+            ref = iso.run([Request(r.rid, r.prompt.copy(), r.max_new)])
+            if got[r.rid] != ref[0].tokens:
+                bad += 1
+                print(f"PARITY FAIL rid={r.rid}: engine {got[r.rid]} "
+                      f"!= isolated {ref[0].tokens}")
+        if bad:
+            raise SystemExit(f"parity check failed for {bad} request(s)")
+        print(f"parity OK: {len(reqs)} requests identical to isolated "
+              "decode")
 
 
 if __name__ == "__main__":

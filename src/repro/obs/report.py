@@ -42,6 +42,12 @@ def rounds_of(records) -> List[dict]:
     return [r for r in records if r.get("kind") == "round"]
 
 
+def steps_of(records) -> List[dict]:
+    """kind="step" records: the serve engine's per-scheduler-tick records
+    (same phase_s contract as rounds, serve-specific metric keys)."""
+    return [r for r in records if r.get("kind") == "step"]
+
+
 def check(meta: dict, records: List[dict]) -> List[str]:
     """Schema problems (empty list == valid trace)."""
     problems = []
@@ -51,12 +57,20 @@ def check(meta: dict, records: List[dict]) -> List[str]:
         problems.append(f"schema {meta.get('schema')!r} != "
                         f"{obs.SCHEMA_VERSION} (this reader)")
     rounds = rounds_of(records)
-    steps = [r for r in records if r.get("kind") == "step"]
+    steps = steps_of(records)
     if not rounds and not steps:
         problems.append("no round/step records")
     idx = [r.get("round") for r in rounds]
     if idx and any(b <= a for a, b in zip(idx, idx[1:])):
         problems.append(f"round indices not strictly monotone: {idx}")
+    sidx = [r.get("round") for r in steps]
+    if sidx and any(b <= a for a, b in zip(sidx, sidx[1:])):
+        problems.append(f"step indices not strictly monotone: {sidx}")
+    for r in steps:
+        ph = r.get("phase_s", {})
+        if any(v < 0 for v in ph.values()):
+            problems.append(f"step {r.get('round')}: bad phase_s {ph}")
+            break
     for r in rounds:
         m = r.get("metrics", {})
         required = obs.round_metric_keys(obs.streams_of(m) or ("params",))
@@ -127,10 +141,11 @@ def summarize(meta: dict, records: List[dict]) -> dict:
     """Per-phase p50/p99, wire totals by stream, consensus trajectory,
     participation — the reporting layer of DESIGN.md §13."""
     rounds = rounds_of(records)
+    steps = steps_of(records)
     out = {"meta": {k: v for k, v in meta.items() if k != "kind"},
-           "n_rounds": len(rounds)}
+           "n_rounds": len(rounds), "n_steps": len(steps)}
     phases = {}
-    for r in rounds:
+    for r in rounds + steps:     # serve step phases aggregate identically
         for k, v in r.get("phase_s", {}).items():
             phases.setdefault(k, []).append(float(v))
     out["phase_s"] = {
@@ -191,13 +206,15 @@ def main(argv=None) -> int:
         streams = (list(obs.streams_of(rounds[0]["metrics"]))
                    if rounds else [])
         print(f"OK: {len(rounds)} round record(s), "
+              f"{len(steps_of(records))} step record(s), "
               f"schema v{meta.get('schema')}, streams {streams}")
         return 0
     s = summarize(meta, records)
     if args.json:
         print(json.dumps(s, indent=1))
         return 0
-    print(f"trace: {args.trace}  rounds: {s['n_rounds']}")
+    print(f"trace: {args.trace}  rounds: {s['n_rounds']}  "
+          f"steps: {s['n_steps']}")
     for k, v in s.get("phase_s", {}).items():
         print(f"  phase {k:<12} p50 {v['p50']*1e3:8.1f}ms  "
               f"p99 {v['p99']*1e3:8.1f}ms  total {v['total']:.2f}s")

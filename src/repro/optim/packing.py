@@ -228,6 +228,20 @@ def chunk_rows(x: jax.Array, chunk: int) -> jax.Array:
     return x.reshape(-1, chunk)
 
 
+def pad_rows(x: jax.Array, row: int) -> jax.Array:
+    """(..., N) buffer -> (..., n_rows, row) zero-padded 2-D view.
+
+    ``chunk_rows`` for callers that must KEEP the leading axes: the serve
+    engine (repro.serve) scatters each batch slot's packed recurrent
+    state into its own rows of the paged pool, so the row split may not
+    flatten the slot axis away."""
+    n = x.shape[-1]
+    pad = (-n) % row
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(x.shape[:-1] + (-1, row))
+
+
 def unchunk_rows(rows: jax.Array, shape) -> jax.Array:
     """Invert ``chunk_rows``: (rows, chunk) back to the ``shape`` buffer
     (the zero padding on the last axis is sliced off)."""

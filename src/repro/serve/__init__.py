@@ -1,0 +1,23 @@
+"""Continuous-batching serve engine (DESIGN.md §15).
+
+The inference half of the north star: slot-scheduled continuous
+batching over paged flat-buffer caches, fed by checkpoint→serve handoff
+from localsgd training runs.
+
+  paging   one f32 pool (n_pages, page_elems): KV pages + recurrent-state
+           rows, chunk-aligned like the §9 codec chunks; host FreeList
+  decode   fixed-shape jit programs per family (dense/moe paged decode
+           through the Pallas kernel, hybrid shared-attn + state rows,
+           ssm state rows); explicit refusals for vlm/audio
+  engine   the host scheduler: admit into freed slots every step, retire
+           without recompiling; static-batch policy for baselines
+  handoff  restore trained params (pytree or packed flat buffer) from
+           checkpoint/io.py
+"""
+from repro.serve.engine import (Engine, EngineConfig, Request,
+                                drive_workload, poisson_workload)
+from repro.serve.handoff import restore_params
+from repro.serve.paging import PageGeom
+
+__all__ = ["Engine", "EngineConfig", "Request", "PageGeom",
+           "drive_workload", "poisson_workload", "restore_params"]

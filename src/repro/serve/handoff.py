@@ -1,0 +1,65 @@
+"""Checkpoint -> serve handoff: restore trained params into the serve
+model (DESIGN.md §15).
+
+Two accepted checkpoint formats, both written by ``checkpoint/io.py``:
+
+  pytree  the structure ``launch/train.py --checkpoint`` saves — the
+          averaged server params (``localsgd.server_params``), keys
+          matching ``model.abstract()``.
+  packed  a single flat f32 buffer under the key ``"buf"`` — either
+          ``(size,)`` (server buffer) or ``(G, size)`` (per-group
+          buffers; groups are averaged, the same reduction
+          ``server_params`` applies). Unpacked through the model's own
+          ``optim/packing`` Layout, so trailing shard/chunk padding is
+          sliced off and per-leaf dtypes are restored.
+
+The checkpoint's ``arch`` metadata must match the serve config when
+present — serving qwen3 weights through a granite graph would "work"
+(same pytree shapes are not even required to differ) and be silently
+wrong.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.optim.packing import layout_of, unpack
+
+
+def restore_params(path: str, model, check_arch: bool = True):
+    """Load ``path`` (npz+json, no extension) into ``model``'s param
+    structure. Returns a params pytree of device arrays."""
+    try:
+        meta = ckpt_io.load_metadata(path)
+    except FileNotFoundError:
+        meta = {}
+    if check_arch and meta.get("arch") and meta["arch"] != model.cfg.name:
+        raise ValueError(
+            f"checkpoint {path!r} was trained for arch {meta['arch']!r}, "
+            f"serve config is {model.cfg.name!r} — pass the matching "
+            "--arch, or check_arch=False to force")
+    like = model.abstract()
+    try:
+        tree = ckpt_io.load(path, like)
+    except KeyError:
+        tree = _restore_packed(path, like)
+    return jax.tree.map(jnp.asarray, tree)
+
+
+def _restore_packed(path: str, like):
+    try:
+        buf = np.asarray(ckpt_io.load(path, {"buf": 0})["buf"], np.float32)
+    except KeyError:
+        raise ValueError(
+            f"checkpoint {path!r} matches neither the params pytree nor "
+            "the packed {'buf': ...} format") from None
+    if buf.ndim > 1:                  # (G, size): average the groups
+        buf = buf.mean(axis=0)
+    layout = layout_of(like)
+    if buf.shape[-1] < layout.size:
+        raise ValueError(
+            f"packed checkpoint buffer has {buf.shape[-1]:,} elements, "
+            f"arch needs {layout.size:,} — wrong config?")
+    return unpack(jnp.asarray(buf[:layout.size]), layout)
