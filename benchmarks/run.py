@@ -23,7 +23,8 @@ from benchmarks import (ablation_opt_state, comm_bytes, comm_reduction,
                         fault_tolerance, fig2a_feasibility,
                         fig2b_linear_rate, fig3_intersection, fig4_deepnet,
                         fig5_quartic, fig67_nodes, overlap,
-                        roofline_report, round_throughput, serve_latency)
+                        roofline_report, round_throughput, serve_latency,
+                        tier)
 
 BENCHES = [
     ("fig2a_feasibility", fig2a_feasibility.main,
@@ -69,6 +70,15 @@ BENCHES = [
                f"sharded={r['headline_sharded']['push_sum_gsq_margin']:.1f}x"
                f" unbias={r['headline']['push_sum_unbias_factor']:.0f}x"
                " (bar 100)"),
+    ("tier", tier.main,
+     lambda r: f"cross-tier wire reduction="
+               f"{r['headline']['cross_tier_wire_reduction']:.2f}x "
+               "(bar 3.5) unbias="
+               f"{r['headline']['tier_unbias_factor']:.0f}x (bar 1e4) "
+               f"sharded margin="
+               f"{r['headline_sharded']['tier_gsq_margin']:.1f}x"
+               " rejoin="
+               + ("ok" if r["rejoin"]["rejoin_exact"] else "FAIL")),
     ("overlap", overlap.main,
      lambda r: "overlap modeled speedup T=4="
                f"{r['headline']['modeled_speedup_T4']:.2f}x (bar 1.15) "
@@ -107,6 +117,12 @@ HEADLINE_BARS = {
         ("headline", "push_sum_unbias_factor", "unbias_bar"),
         ("headline_sharded", "push_sum_gsq_margin", "bar"),
     ],
+    "BENCH_tier.json": [
+        ("headline", "cross_tier_wire_reduction", "wire_bar"),
+        ("headline", "tier_unbias_factor", "unbias_bar"),
+        ("headline", "tier_gsq_margin", "bar"),
+        ("headline_sharded", "tier_gsq_margin", "bar"),
+    ],
     "BENCH_overlap.json": [
         ("headline", "modeled_speedup_T4", "bar"),
         ("headline_online_t", "wire_ratio_static_over_online", "bar"),
@@ -126,6 +142,7 @@ SMOKE_RUNS = [
      {"COMM_BYTES_SMOKE": "1"}),
     ("fault_tolerance", "benchmarks/fault_tolerance.py",
      {"FAULT_SMOKE": "1"}),
+    ("tier", "benchmarks/tier.py", {"TIER_SMOKE": "1"}),
     ("overlap", "benchmarks/overlap.py", {"OVERLAP_SMOKE": "1"}),
     ("serve_latency", "benchmarks/serve_latency.py", {"SERVE_SMOKE": "1"}),
 ]

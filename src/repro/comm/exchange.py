@@ -27,6 +27,18 @@ composes a TOPOLOGY (who talks to whom) with a per-stream CODEC policy
                doubly-stochastic topologies above measurably bias.
   none         no communication (W = I, zero wire bytes) — the
                disconnected baseline for ablations and parity tests.
+  hierarchical two-tier exchange (DESIGN.md §16): the G axis factors
+               into ``n_pods`` contiguous pods of ``G // n_pods``
+               groups. Each round first mixes WITHIN pods
+               (``intra_topology``: a pod-local circulant ring or an
+               exact pod mean) over the fast reliable tier, then ACROSS
+               pods (``inter_topology``: push_sum ratio consensus with
+               mass-conserving backlogs over the lossy DCN tier, or a
+               reliable leader-mean server step) — with an independent
+               cross-tier codec (``inter_codec``, e.g. int8 across +
+               bf16 within), per-tier fault plans
+               (``faults.TieredFaultPlan``) on independent seed lanes,
+               and per-tier wire/participation/delivery accounting.
 
 Fault injection (DESIGN.md §12): an optional ``FaultPlan``
 (comm/faults.py — seeded, replayable, pure in ``(round, seed)``) masks
@@ -83,11 +95,31 @@ from repro.comm import faults as faults_mod
 from repro.comm import topology as topo_mod
 
 TOPOLOGIES = ("server", "ring", "gossip", "async_stale", "push_sum",
-              "none")
+              "none", "hierarchical")
+
+INTRA_TOPOLOGIES = ("ring", "server")        # pod-internal tier
+INTER_TOPOLOGIES = ("push_sum", "server")    # cross-pod tier
 
 # moment streams default to the uncompressed wire (one shared instance:
 # the identity codec is stateless and pure)
 _FP32 = codecs_mod.fp32()
+
+
+def elect_leaders(act, n_pods: int):
+    """Deterministic pod-leader election from a (G,) liveness mask
+    (DESIGN.md §16): the leader of each contiguous pod is its FIRST live
+    member — pure in the mask, so a checkpoint resume replays the same
+    election and every node agrees without a round of coordination.
+    Returns ``(leader_w, pod_live)``: ``leader_w`` a (G,) one-hot-per-pod
+    weight vector (all-zero for a fully-dead pod) and ``pod_live`` the
+    (n_pods,) pod liveness (a pod is live while ANY member is — leader
+    dropout re-elects instead of partitioning the pod)."""
+    a = act.reshape(n_pods, -1)
+    pod_live = jnp.max(a, axis=1)
+    lead = jnp.argmax(a, axis=1)          # first max = first live member
+    onehot = (jax.nn.one_hot(lead, a.shape[1], dtype=jnp.float32)
+              * pod_live[:, None])
+    return onehot.reshape(-1), pod_live
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,10 +163,45 @@ class Exchange:
     # (async_stale s=1 semantics); False (default) keeps the barrier
     # engine bit-exactly.
     overlap: bool = False
+    # hierarchical (DESIGN.md §16): the tier factoring G = n_pods x
+    # pod_size (0 = not hierarchical), the per-tier mixing steps, and
+    # the optional cross-tier codec (None -> each stream's own codec
+    # rides the inter tier too). ``fault_plan`` is a TieredFaultPlan
+    # when the topology is hierarchical (per-tier seed lanes).
+    n_pods: int = 0
+    intra_topology: str = "ring"
+    inter_topology: str = "push_sum"
+    inter_codec: Optional[codecs_mod.Codec] = None
 
     @property
     def mcodec(self) -> codecs_mod.Codec:
         return self.moment_codec if self.moment_codec is not None else _FP32
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.topology == "hierarchical"
+
+    @property
+    def pod_len(self) -> int:
+        """Members per pod (validated tier factoring, DESIGN.md §16)."""
+        return topo_mod.pod_size(self.n_groups, self.n_pods)
+
+    @property
+    def intra_plan(self) -> Optional[faults_mod.FaultPlan]:
+        p = self.fault_plan
+        return p.intra if isinstance(p, faults_mod.TieredFaultPlan) else None
+
+    @property
+    def inter_plan(self) -> Optional[faults_mod.FaultPlan]:
+        p = self.fault_plan
+        return p.inter if isinstance(p, faults_mod.TieredFaultPlan) else None
+
+    def inter_stream_codec(self, stream: str) -> codecs_mod.Codec:
+        """The codec a stream rides the CROSS-POD tier with: the
+        dedicated ``inter_codec`` when set, else the stream's own codec
+        (single codec policy across both tiers)."""
+        return (self.inter_codec if self.inter_codec is not None
+                else self.stream_codec(stream))
 
     @property
     def faulty(self) -> bool:
@@ -148,6 +215,27 @@ class Exchange:
         under delivered-edge pricing and ``AdaptiveT.from_exchange``."""
         return (self.fault_plan.expected_delivery
                 if self.fault_plan is not None else 1.0)
+
+    @property
+    def delivery_rate_intra(self) -> float:
+        """Delivery rate of the pod-internal tier. Flat topologies are
+        single-tier — the whole wire is "intra" by the §13 convention
+        (one big pod), so this equals ``delivery_rate`` there."""
+        if not self.hierarchical:
+            return self.delivery_rate
+        p = self.fault_plan
+        return (p.expected_delivery_intra
+                if isinstance(p, faults_mod.TieredFaultPlan) else 1.0)
+
+    @property
+    def delivery_rate_inter(self) -> float:
+        """Delivery rate of the cross-pod tier (1.0 for flat topologies
+        — no cross-pod wire exists, §13 convention)."""
+        if not self.hierarchical:
+            return 1.0
+        p = self.fault_plan
+        return (p.expected_delivery_inter
+                if isinstance(p, faults_mod.TieredFaultPlan) else 1.0)
 
     @property
     def p2p(self) -> bool:
@@ -168,23 +256,50 @@ class Exchange:
         return (self.downlink_codec is not None
                 and not self.downlink_codec.identity
                 and self.w is None
-                and self.topology not in ("none", "push_sum"))
+                and self.topology not in ("none", "push_sum",
+                                          "hierarchical"))
 
     def stream_codec(self, stream: str) -> codecs_mod.Codec:
         """The per-stream codec policy: params get ``codec``, every
         moment stream gets ``moment_codec`` (DESIGN.md §10)."""
         return self.codec if stream == "params" else self.mcodec
 
+    def lossy_stream(self, stream: str) -> bool:
+        """True when ``stream`` needs its round-start reference in
+        ``xs0`` — some codec on its path encodes a round DELTA. Covers
+        the stream's own codec AND the hierarchical cross-tier codec on
+        the server inter tier (the int8 cell encodes the delta vs the
+        round start, DESIGN.md §16); identity-codec streams never touch
+        x0, keeping the default path bit-exact and donation-safe."""
+        if not self.stream_codec(stream).identity:
+            return True
+        return (self.hierarchical and self.inter_topology == "server"
+                and not self.inter_stream_codec(stream).identity)
+
     @property
     def name(self) -> str:
-        base = f"{self.topology}/{self.codec.name}"
+        if self.hierarchical:
+            base = (f"hier[{self.intra_topology}x{self.n_pods}"
+                    f"|{self.inter_topology}]/{self.codec.name}")
+        else:
+            base = f"{self.topology}/{self.codec.name}"
         if not self.mcodec.identity:
             base += f"+m:{self.mcodec.name}"
+        if self.inter_codec is not None:
+            base += f"+x:{self.inter_codec.name}"
         if self.downlink_codec is not None:
             base += f"+d:{self.downlink_codec.name}"
         if self.faulty:
-            base += (f"+drop{self.fault_plan.drop_rate:g}"
-                     f"@{self.fault_plan.seed}")
+            p = self.fault_plan
+            if isinstance(p, faults_mod.TieredFaultPlan):
+                tags = []
+                if p.intra is not None:
+                    tags.append(f"i{p.intra.drop_rate:g}@{p.intra.seed}")
+                if p.inter is not None:
+                    tags.append(f"x{p.inter.drop_rate:g}@{p.inter.seed}")
+                base += "+drop[" + ",".join(tags) + "]"
+            else:
+                base += f"+drop{p.drop_rate:g}@{p.seed}"
         if self.overlap:
             base += "+ov"
         return base
@@ -195,6 +310,8 @@ class Exchange:
             return False   # no wire: the codecs never run, no state
         if self.overlap:
             return True    # the in-flight payload IS round-to-round state
+        if self.hierarchical:
+            return True    # round counter + per-tier participation always
         return (self.topology in ("async_stale", "push_sum")
                 or self.codec.stateful or self.mcodec.stateful
                 or self.lossy_downlink or self.faulty)
@@ -257,6 +374,49 @@ class Exchange:
             if moments:
                 state["pushed_opt"] = {
                     k: jax.tree.map(jnp.copy, v) for k, v in moments.items()}
+        if self.hierarchical:
+            # DESIGN.md §16: cross-tier codec state (e.g. the int8
+            # rng counter) keyed "inter:<stream>" so it never collides
+            # with the intra-tier codec state of the same stream
+            names = ["params"] + (list(moments) if moments else [])
+            vals = {"params": params_G}
+            if moments:
+                vals.update(moments)
+            ic_state = {}
+            for k in names:
+                ic = self.inter_stream_codec(k)
+                if ic.stateful:
+                    ic_state["inter:" + k] = ic.init(vals[k])
+            if ic_state:
+                state.setdefault("codec", {}).update(ic_state)
+            if self.inter_topology == "push_sum":
+                # pod-level ratio consensus: same mass/backlog counters
+                # as flat push_sum, with one backlog slot per POD-graph
+                # circulant offset; all state stays at G-leading shape
+                # (every member lane carries 1/pod_size of pod traffic)
+                # so checkpointing and sharding are unchanged. Invariant:
+                # sum(mass) + sum(backlog_w) == G exactly, every round.
+                offs_p = topo_mod.push_sum_offsets(self.n_pods)
+
+                def pblz(v):
+                    return jax.tree.map(
+                        lambda a: jnp.zeros((len(offs_p),) + a.shape,
+                                            jnp.float32), v)
+
+                state["mass"] = jnp.ones((self.n_groups,), jnp.float32)
+                state["backlog"] = {"params": pblz(params_G)}
+                if moments:
+                    state["backlog"].update(
+                        {k: pblz(v) for k, v in moments.items()})
+                state["backlog_w"] = jnp.zeros(
+                    (len(offs_p), self.n_groups), jnp.float32)
+            # the round counter drives the per-tier fault masks and the
+            # leader election — checkpoint resume replays both exactly
+            state["round"] = jnp.zeros((), jnp.int32)
+            state["participation"] = jnp.ones((), jnp.float32)
+            state["participation_intra"] = jnp.ones((), jnp.float32)
+            state["participation_inter"] = jnp.ones((), jnp.float32)
+            return state
         if self.topology == "push_sum":
             # ratio-consensus mass counters (DESIGN.md §12): per-node
             # weight mass plus per-directed-edge backlog buffers for the
@@ -481,6 +641,16 @@ class Exchange:
         vanishes as rounds converge. Every stream follows the same
         topology; each keeps its own codec state and (async) staleness
         buffer. Returns ``(mixed: {name: value}, new_comm_state)``."""
+        if (isinstance(self.fault_plan, faults_mod.TieredFaultPlan)
+                and not self.hierarchical):
+            raise NotImplementedError(
+                f"topology {self.topology!r} is single-tier — a "
+                "TieredFaultPlan has no intra/inter split to bind to; "
+                "the only valid tiered-fault topology is 'hierarchical'. "
+                "Flat topologies take a plain FaultPlan: 'server', "
+                "'ring', 'gossip', 'async_stale', 'push_sum'")
+        if self.hierarchical:
+            return self._hier_streams(xs, xs0, comm_state)
         if self.topology == "push_sum":
             return self._push_sum_streams(xs, comm_state)
         plan = self.fault_plan if self.topology != "none" else None
@@ -702,6 +872,263 @@ class Exchange:
             / float(self.mix_rounds * len(offs)))
         return mixed, new_state
 
+    def _hier_streams(self, xs: dict, xs0: dict, comm_state: dict):
+        """Two-tier hierarchical round (DESIGN.md §16).
+
+        Stage A — the pod-internal tier: G reshapes to (n_pods,
+        pod_size) and mixes WITHIN each contiguous pod.
+        ``intra_topology='ring'`` runs ``mix_rounds`` pod-local
+        circulant hops (cast codecs quantize the transmitted neighbor
+        payload, the self term stays exact; under an intra FaultPlan a
+        lost payload self-substitutes — rows stay stochastic, the same
+        documented pod-internal bias as flat gossip-under-loss).
+        ``intra_topology='server'`` takes the exact pod mean (masked
+        survivor mean under faults).
+
+        Stage B — the cross-pod tier, on independent fault/codec lanes.
+        ``inter_topology='push_sum'`` runs ONE hop of pod-level ratio
+        consensus: the pod graph's circulant offsets stride ``pod_size``
+        on the G axis, every mask is drawn at pod granularity and
+        repeated per member (each member lane carries 1/pod_size of its
+        pod's traffic — this pod-uniformity is what keeps the weight
+        channel pod-uniform and the estimate unbiased), and the
+        mass-conserving per-edge backlogs work exactly as in flat
+        push_sum: sum(mass) + sum(backlog_w) == G every round, a
+        fully-partitioned pod degrades to local-only rounds and rejoins
+        by draining queued mass. Pod liveness survives leader dropout —
+        ``elect_leaders`` re-elects the first live member
+        deterministically from the plan's active mask.
+        ``inter_topology='server'`` is the reliable-DCN baseline: each
+        pod's elected leader ships its model (through ``inter_codec`` —
+        the int8 cross-tier cell) and every live member receives the
+        leader mean.
+
+        Per-tier participation rides ``comm_state`` for the §13 keys;
+        the overall scalar weights the tiers by their static payload
+        counts."""
+        G, n_pods = self.n_groups, self.n_pods
+        s = self.pod_len
+        if (self.fault_plan is not None
+                and not isinstance(self.fault_plan,
+                                   faults_mod.TieredFaultPlan)):
+            raise NotImplementedError(
+                "hierarchical faults are per-tier: a flat FaultPlan does "
+                "not say WHICH tier it masks — wrap it as "
+                "faults.TieredFaultPlan(intra=..., inter=...); valid "
+                "tiers: 'intra' (pod-internal), 'inter' (cross-pod)")
+        for name in xs:
+            c = self.stream_codec(name)
+            if not (c.identity or c.name in ("fp16", "bf16")):
+                raise NotImplementedError(
+                    f"hierarchical intra tier + {c.name}: pod-internal "
+                    "hops carry whole-value payloads, not round deltas "
+                    "(DESIGN.md §16); valid intra codecs: 'fp32', "
+                    "'fp16', 'bf16' — put int8 on the cross-tier wire "
+                    "via inter_codec with inter_topology='server'")
+            ic = self.inter_stream_codec(name)
+            if self.inter_topology == "push_sum" and not (
+                    ic.identity or ic.name in ("fp16", "bf16")):
+                raise NotImplementedError(
+                    f"hierarchical push_sum inter tier + {ic.name}: the "
+                    "cross-pod wire carries cumulative (value, weight) "
+                    "mass, not round deltas (DESIGN.md §12/§16); valid "
+                    "push_sum inter codecs: 'fp32', 'fp16', 'bf16' — or "
+                    "inter_topology='server' for 'int8'")
+        ip, xp = self.intra_plan, self.inter_plan
+        rnd = comm_state["round"]
+        new_state = dict(comm_state)
+
+        def pod_take(x, d):
+            # payload arriving at member i from pod-mate (i + d) % s
+            r = x.reshape((n_pods, s) + x.shape[1:])
+            return jnp.roll(r, -d, axis=1).reshape(x.shape)
+
+        # ---- stage A: pod-internal tier ------------------------------
+        act_i = (ip.active_mask(rnd, G) if ip is not None
+                 else jnp.ones((G,), jnp.float32))
+        ys = {k: jax.tree.map(lambda v: v.astype(jnp.float32), x)
+              for k, x in xs.items()}
+        part_intra = jnp.ones((), jnp.float32)
+        if s > 1 and self.intra_topology == "ring":
+            w_self, offs_pod, w_edge = topo_mod.ring_circulant(s)
+            mask_sum, mask_n = 0.0, 0
+            for h in range(self.mix_rounds):
+                masks_a = []
+                for di, d in enumerate(offs_pod):
+                    bern = (ip.edge_mask(rnd, h, di, G) if ip is not None
+                            else jnp.ones((G,), jnp.float32))
+                    masks_a.append(bern * pod_take(act_i, d) * act_i)
+                mask_sum = mask_sum + sum(jnp.mean(m) for m in masks_a)
+                mask_n += len(masks_a)
+                for k in list(ys):
+                    codec = self.stream_codec(k)
+
+                    def hop(v, _codec=codec, _masks=masks_a):
+                        s1 = (G,) + (1,) * (v.ndim - 1)
+                        out = w_self * v
+                        for di, d in enumerate(offs_pod):
+                            t = pod_take(v, d)
+                            if not _codec.identity:
+                                t = _codec.compress(t, {})[0]
+                            m = _masks[di].reshape(s1)
+                            # lost payload -> self-substitution (rows
+                            # stay stochastic); stalled receiver keeps
+                            # its value outright
+                            out = out + w_edge * (m * t + (1.0 - m) * v)
+                        return jnp.where(act_i.reshape(s1) > 0, out, v)
+
+                    ys[k] = jax.tree.map(hop, ys[k])
+            if ip is not None and mask_n:
+                part_intra = mask_sum / float(mask_n)
+        elif s > 1:                                # intra "server"
+            deliv = (ip.push_mask(rnd, G) if ip is not None
+                     else jnp.ones((G,), jnp.float32))
+            for k in list(ys):
+                codec = self.stream_codec(k)
+
+                def pod_mean(v, _codec=codec):
+                    r = v.reshape((n_pods, s) + v.shape[1:])
+                    t = r if _codec.identity else _codec.compress(r, {})[0]
+                    sh = (n_pods, s) + (1,) * (v.ndim - 1)
+                    dv = deliv.reshape(sh)
+                    den = jnp.sum(dv, axis=1, keepdims=True)
+                    m = (jnp.sum(dv * t, axis=1, keepdims=True)
+                         / jnp.maximum(den, 1.0))
+                    recv = jnp.logical_and(act_i.reshape(sh) > 0, den > 0)
+                    out = jnp.where(recv, jnp.broadcast_to(m, r.shape), r)
+                    return out.reshape(v.shape)
+
+                ys[k] = jax.tree.map(pod_mean, ys[k])
+            if ip is not None:
+                part_intra = jnp.mean(deliv)
+
+        # ---- stage B: cross-pod tier ---------------------------------
+        offs_p = topo_mod.push_sum_offsets(n_pods)
+        cstates = dict(comm_state.get("codec", {}))
+        touched = False
+        if self.inter_topology == "push_sum" and offs_p:
+            act_x = (xp.active_mask(rnd, G) if xp is not None
+                     else jnp.ones((G,), jnp.float32))
+            _, pod_live = elect_leaders(act_x, n_pods)
+            act_pod = jnp.repeat(pod_live, s)
+            a = 1.0 / (len(offs_p) + 1.0)
+            masks, incs = [], []
+            for di, dp in enumerate(offs_p):
+                # one Bernoulli per DCN edge per round, drawn at pod
+                # granularity from the inter seed lane and shared by the
+                # pod's member lanes (the leader uplink model — what
+                # keeps the weight channel pod-uniform)
+                bern = (xp.edge_mask(rnd, 0, di, n_pods)
+                        if xp is not None
+                        else jnp.ones((n_pods,), jnp.float32))
+                src = jnp.roll(act_pod, dp * s)
+                incs.append(src)
+                masks.append(jnp.repeat(bern, s) * src * act_pod)
+            w = comm_state["mass"]
+            blw = comm_state["backlog_w"]
+            nums = {k: jax.tree.map(
+                        lambda v: v * w.reshape((G,) + (1,) * (v.ndim - 1)),
+                        ys[k])
+                    for k in ys}
+            backlog = {k: comm_state["backlog"][k] for k in xs}
+            new_w = jnp.where(act_pod > 0, a * w, w)
+            new_blw = []
+            for di, dp in enumerate(offs_p):
+                b = blw[di] + incs[di] * jnp.roll(a * w, dp * s)
+                new_w = new_w + masks[di] * b
+                new_blw.append(b - masks[di] * b)
+            for k in list(nums):
+                ic = self.inter_stream_codec(k)
+
+                def hop_leaf(x, bl, _ic=ic):
+                    s1 = (G,) + (1,) * (x.ndim - 1)
+                    y = jnp.where(act_pod.reshape(s1) > 0, a * x, x)
+                    nb = []
+                    for di, dp in enumerate(offs_p):
+                        b = bl[di] + (incs[di].reshape(s1)
+                                      * jnp.roll(a * x, dp * s, axis=0))
+                        t = b if _ic.identity \
+                            else _ic.compress(b, {})[0]
+                        m = masks[di].reshape(s1)
+                        y = y + m * t
+                        nb.append(b - m * t)
+                    return (y, jnp.stack(nb))
+
+                pairs = jax.tree.map(hop_leaf, nums[k], backlog[k])
+                is_pair = (lambda t: isinstance(t, tuple))
+                nums[k] = jax.tree.map(lambda p: p[0], pairs,
+                                       is_leaf=is_pair)
+                backlog[k] = jax.tree.map(lambda p: p[1], pairs,
+                                          is_leaf=is_pair)
+            mixed = {}
+            for k, v in xs.items():
+                def ratio(num, orig):
+                    den = new_w.reshape((G,) + (1,) * (num.ndim - 1))
+                    return (num / den).astype(orig.dtype)
+
+                mixed[k] = jax.tree.map(ratio, nums[k], v)
+            new_state["mass"] = new_w
+            new_state["backlog"] = backlog
+            new_state["backlog_w"] = jnp.stack(new_blw)
+            part_inter = (sum(jnp.mean(m) for m in masks)
+                          / float(len(offs_p))
+                          if xp is not None else jnp.ones((), jnp.float32))
+        elif self.inter_topology == "push_sum":    # single pod: no DCN
+            mixed = {k: jax.tree.map(lambda y, o: y.astype(o.dtype),
+                                     ys[k], xs[k]) for k in xs}
+            part_inter = jnp.ones((), jnp.float32)
+        else:                                      # inter "server"
+            act_x = (xp.active_mask(rnd, G) if xp is not None
+                     else jnp.ones((G,), jnp.float32))
+            lead_w, plive = elect_leaders(act_i * act_x, n_pods)
+            n_live = jnp.maximum(jnp.sum(plive), 1.0)
+            mixed = {}
+            for k in list(ys):
+                ic = self.inter_stream_codec(k)
+                y = ys[k]
+                if not ic.identity:
+                    # the cross-tier codec (e.g. int8) codes the round
+                    # DELTA vs the round-start reference, per group —
+                    # only the elected leaders' decoded payloads enter
+                    # the mean, but encoding the full buffer keeps the
+                    # rng counter schedule group-independent
+                    key = "inter:" + k
+                    delta = jax.tree.map(
+                        lambda a, b: a - b.astype(jnp.float32),
+                        y, xs0[k])
+                    d_hat, cs = ic.compress(delta, cstates.get(key, {}))
+                    y = jax.tree.map(
+                        lambda b, d: b.astype(jnp.float32) + d,
+                        xs0[k], d_hat)
+                    if ic.stateful:
+                        cstates[key] = cs
+                        touched = True
+
+                def gmean(v, orig):
+                    s1 = (G,) + (1,) * (v.ndim - 1)
+                    lw = lead_w.reshape(s1)
+                    m = jnp.sum(lw * v, axis=0, keepdims=True) / n_live
+                    out = jnp.where(act_i.reshape(s1) > 0,
+                                    jnp.broadcast_to(m, v.shape), v)
+                    return out.astype(orig.dtype)
+
+                mixed[k] = jax.tree.map(gmean, y, xs[k])
+            part_inter = (jnp.mean(plive)
+                          if (ip is not None or xp is not None)
+                          else jnp.ones((), jnp.float32))
+        n_is = self._intra_send_count()
+        n_xs = self._inter_send_count()
+        tot = n_is + n_xs
+        if touched:
+            new_state["codec"] = cstates
+        new_state["round"] = rnd + 1
+        new_state["participation"] = (
+            (part_intra * n_is + part_inter * n_xs) / tot if tot > 0
+            else jnp.ones((), jnp.float32))
+        new_state["participation_intra"] = part_intra
+        new_state["participation_inter"] = part_inter
+        return mixed, new_state
+
     def _apply_downlink(self, mixed: dict, comm_state: dict,
                         new_state: dict):
         """Model the compressed broadcast reply (DESIGN.md §11): what
@@ -795,6 +1222,9 @@ class Exchange:
         once per s+1 rounds; exact when (s+1) divides G)."""
         if self.topology == "none":
             return 0.0
+        if self.hierarchical:
+            return (self._intra_send_count()
+                    + self._inter_send_count(delivered=True))
         if self.topology == "server":
             return float(self.n_groups)
         if self.topology == "async_stale":
@@ -856,6 +1286,78 @@ class Exchange:
             return moment_sizes
         return {"moments": moment_elems} if moment_elems else {}
 
+    # -- hierarchical per-tier accounting (DESIGN.md §16) ------------------
+
+    def _intra_send_count(self) -> float:
+        """UPLINK payloads of the pod-internal tier per round: one per
+        pod-local circulant edge per hop (ring), or one member uplink
+        each (server)."""
+        s = self.pod_len
+        if s <= 1:
+            return 0.0
+        if self.intra_topology == "server":
+            return float(self.n_groups)
+        _, offs_pod, _ = topo_mod.ring_circulant(s)
+        return float(self.n_groups * len(offs_pod) * self.mix_rounds)
+
+    def _inter_send_count(self, delivered: bool = False) -> float:
+        """UPLINK payloads of the cross-pod tier per round — pod leaders
+        carry the traffic: one payload per pod per directed DCN edge
+        (push_sum: delivered-edge pricing like flat push_sum when
+        ``delivered``), or one leader uplink per pod (server)."""
+        if self.inter_topology == "server":
+            return float(self.n_pods)
+        offs_p = topo_mod.push_sum_offsets(self.n_pods)
+        n = float(len(offs_p) * self.n_pods)
+        return n * self.delivery_rate_inter if delivered else n
+
+    def _tier_wire(self, n_params: int,
+                   moment_sizes: Optional[Dict[str, int]]):
+        """Per-tier wire tables: ``{"intra"|"inter": {"up": {stream:
+        bytes}, "down": ..., "total": ...}}``. p2p tiers (intra ring,
+        inter push_sum) mirror each edge payload in up/down but count it
+        ONCE in the total; server-style tiers count uplink and broadcast
+        reply as distinct payloads. The total identity the §13 schema
+        checks is ``wire_bytes == wire_bytes_intra + wire_bytes_inter``."""
+        iw = {"params": self.codec.wire_bytes(n_params)}
+        xw = {"params":
+              self.inter_stream_codec("params").wire_bytes(n_params)}
+        if self.inter_topology == "push_sum":
+            xw["params"] += 4        # the fp32 weight-mass counter
+        for k, n in (moment_sizes or {}).items():
+            iw[k] = self.mcodec.wire_bytes(n)
+            xw[k] = self.inter_stream_codec(k).wire_bytes(n)
+        n_i = self._intra_send_count()
+        n_x = self._inter_send_count(delivered=True)
+        out = {}
+        up = {k: int(round(n_i * b)) for k, b in iw.items()}
+        out["intra"] = ({"up": up, "down": dict(up), "total": dict(up)}
+                        if self.intra_topology == "ring" else
+                        {"up": up, "down": dict(up),
+                         "total": {k: 2 * v for k, v in up.items()}})
+        up = {k: int(round(n_x * b)) for k, b in xw.items()}
+        out["inter"] = ({"up": up, "down": dict(up), "total": dict(up)}
+                        if self.inter_topology == "push_sum" else
+                        {"up": up, "down": dict(up),
+                         "total": {k: 2 * v for k, v in up.items()}})
+        return out
+
+    def wire_bytes_by_tier(self, n_params: int,
+                           moment_sizes: Optional[Dict[str, int]] = None
+                           ) -> Dict[str, int]:
+        """TOTAL bytes per round per tier (the §13 ``wire_bytes_intra``
+        / ``wire_bytes_inter`` keys). Flat topologies are single-tier by
+        convention — the whole wire is the intra tier (one big pod),
+        inter = 0 — so the tier identity ``total == intra + inter``
+        holds for every topology."""
+        if not self.hierarchical:
+            return {"intra": self.wire_bytes_per_round(
+                        n_params, moment_sizes=moment_sizes),
+                    "inter": 0}
+        tw = self._tier_wire(n_params, moment_sizes)
+        return {t: sum(tw[t]["total"].values())
+                for t in ("intra", "inter")}
+
     def wire_bytes_by_stream(self, n_params: int,
                              moment_sizes: Optional[Dict[str, int]] = None
                              ) -> Dict[str, int]:
@@ -863,6 +1365,10 @@ class Exchange:
         counting rule as ``wire_bytes_per_round``: server/async pushes and
         replies are distinct payloads, p2p edge payloads count once). The
         old totals are exactly the sums of these."""
+        if self.hierarchical:
+            tw = self._tier_wire(n_params, moment_sizes)
+            return {k: tw["intra"]["total"][k] + tw["inter"]["total"][k]
+                    for k in tw["intra"]["total"]}
         per = self._stream_payload_bytes(n_params, moment_sizes)
         per_dn = self._downlink_payload_bytes(n_params, moment_sizes)
         s, r = self.senders_per_round(), self.receivers_per_round()
@@ -876,6 +1382,10 @@ class Exchange:
     def wire_bytes_up(self, n_params: int, moment_elems: int = 0, *,
                       moment_sizes: Optional[Dict[str, int]] = None) -> int:
         ms = self._legacy_sizes(moment_elems, moment_sizes)
+        if self.hierarchical:
+            tw = self._tier_wire(n_params, ms)
+            return sum(sum(tw[t]["up"].values())
+                       for t in ("intra", "inter"))
         s = self.senders_per_round()
         return sum(int(round(s * b)) for b in
                    self._stream_payload_bytes(n_params, ms).values())
@@ -883,6 +1393,10 @@ class Exchange:
     def wire_bytes_down(self, n_params: int, moment_elems: int = 0, *,
                         moment_sizes: Optional[Dict[str, int]] = None) -> int:
         ms = self._legacy_sizes(moment_elems, moment_sizes)
+        if self.hierarchical:
+            tw = self._tier_wire(n_params, ms)
+            return sum(sum(tw[t]["down"].values())
+                       for t in ("intra", "inter"))
         r = self.receivers_per_round()
         return sum(int(round(r * b)) for b in
                    self._downlink_payload_bytes(n_params, ms).values())
@@ -909,7 +1423,11 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
                  moment_codec: str = "fp32", downlink_codec: str = "",
                  fused: bool = True, drop_rate: float = 0.0,
                  stall_rate: float = 0.0, fault_seed: int = 0,
-                 dropouts=(), overlap: bool = False) -> Exchange:
+                 dropouts=(), overlap: bool = False, n_pods: int = 0,
+                 intra_topology: str = "ring",
+                 inter_topology: str = "push_sum", inter_codec: str = "",
+                 intra_drop_rate: float = 0.0,
+                 intra_stall_rate: float = 0.0) -> Exchange:
     """Build an Exchange from names (the ``--comm`` / ``--codec`` /
     ``--moment-codec`` / ``--downlink-codec`` flags). ``moment_codec``
     applies to every moment stream of the payload (DESIGN.md §10); topk
@@ -922,11 +1440,92 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
     attaches NO plan, keeping every path bit-exact with the fault-free
     engine. ``overlap`` turns on double-buffered delayed mixing
     (DESIGN.md §14, the ``--overlap`` flag): the round mixes the previous
-    round's in-flight payload while its own local steps run. Every
-    refusal below names the valid alternatives."""
+    round's in-flight payload while its own local steps run.
+
+    Hierarchical (DESIGN.md §16, ``topology="hierarchical"``):
+    ``n_pods`` factors the G axis into contiguous pods;
+    ``intra_topology`` ('ring'|'server') mixes within pods,
+    ``inter_topology`` ('push_sum'|'server') across them;
+    ``inter_codec`` ("" = each stream's own codec) rides the cross-pod
+    wire only. The generic ``drop_rate``/``stall_rate``/``dropouts``
+    describe the LOSSY DCN (inter) tier; ``intra_drop_rate``/
+    ``intra_stall_rate`` cover the ICI tier — the two tiers draw from
+    independent seed lanes of one ``fault_seed``
+    (``faults.fault_seed_for``). Every refusal below names the valid
+    alternatives."""
     if topology not in TOPOLOGIES:
         raise ValueError(f"unknown topology {topology!r}: valid "
                          f"topologies are {TOPOLOGIES}")
+    hier = topology == "hierarchical"
+    if not hier:
+        if n_pods:
+            raise ValueError(
+                f"n_pods only applies to topology 'hierarchical' (got "
+                f"topology={topology!r}); valid flat topologies take no "
+                "tier factoring — use 'hierarchical' or drop n_pods")
+        if inter_codec:
+            raise ValueError(
+                "inter_codec only applies to topology 'hierarchical' — "
+                "flat topologies have one wire; valid per-stream knobs "
+                "there are 'codec', 'moment_codec', 'downlink_codec'")
+        if intra_drop_rate or intra_stall_rate:
+            raise ValueError(
+                "intra_drop_rate/intra_stall_rate only apply to topology "
+                "'hierarchical' — a flat topology's single tier is "
+                "configured via 'drop_rate'/'stall_rate'")
+    if hier:
+        topo_mod.pod_size(n_groups, n_pods)    # validates the factoring
+        if intra_topology not in INTRA_TOPOLOGIES:
+            raise ValueError(
+                f"unknown intra_topology {intra_topology!r}: valid "
+                f"intra-pod topologies are {INTRA_TOPOLOGIES}")
+        if inter_topology not in INTER_TOPOLOGIES:
+            raise ValueError(
+                f"unknown inter_topology {inter_topology!r}: valid "
+                f"cross-pod topologies are {INTER_TOPOLOGIES}")
+        if overlap:
+            raise NotImplementedError(
+                "overlap + hierarchical: the two mixing stages consume "
+                "each other's outputs within one round — a "
+                "one-round-stale in-flight payload would interleave the "
+                "tiers ambiguously (DESIGN.md §16); valid overlap "
+                "topologies: 'server', 'ring', 'gossip'")
+        if downlink_codec:
+            raise NotImplementedError(
+                "hierarchical + downlink_codec: the cross-pod reply is "
+                "priced per tier already — compress it with "
+                "'inter_codec' instead; valid downlink_codec topologies: "
+                "'server', 'async_stale'")
+        for nm, c in (("codec", codec), ("moment_codec", moment_codec)):
+            if c in ("int8", "int8z", "topk"):
+                raise NotImplementedError(
+                    f"hierarchical + {nm}={c!r}: pod-internal hops carry "
+                    "whole-value payloads, not round deltas (DESIGN.md "
+                    "§16); valid intra codecs: 'fp32', 'fp16', 'bf16' — "
+                    "put int8 on the cross-tier wire via inter_codec "
+                    "with inter_topology='server'")
+        if inter_codec == "topk":
+            raise NotImplementedError(
+                "hierarchical + inter_codec='topk': error feedback "
+                "against the pod-leader wire has no per-member residual "
+                "home (DESIGN.md §16); valid inter codecs: 'fp32', "
+                "'fp16', 'bf16', 'int8', 'int8z'")
+        if inter_topology == "push_sum" and inter_codec in ("int8",
+                                                            "int8z"):
+            raise NotImplementedError(
+                f"hierarchical push_sum inter tier + {inter_codec!r}: "
+                "the cross-pod wire carries cumulative (value, weight) "
+                "mass, not round deltas (DESIGN.md §12/§16); valid "
+                "push_sum inter codecs: 'fp32', 'fp16', 'bf16' — or "
+                "inter_topology='server' for 'int8'")
+        if inter_topology == "server" and (drop_rate or stall_rate
+                                           or dropouts):
+            raise NotImplementedError(
+                "hierarchical inter_topology='server' is the "
+                "reliable-DCN baseline — it has no mass counters to "
+                "conserve dropped payloads with; lossy cross-pod faults "
+                "need inter_topology='push_sum', or a flat faulty "
+                "'server'")
     if overlap:
         if topology == "none":
             raise NotImplementedError(
@@ -1045,7 +1644,21 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
                 "§12); valid push_sum moment codecs: 'fp32', 'fp16', "
                 "'bf16'")
     plan = None
-    if drop_rate or stall_rate or dropouts:
+    if hier:
+        # per-tier plans on independent seed lanes of ONE fault_seed
+        # (DESIGN.md §16): the generic drop/stall/dropout flags describe
+        # the lossy DCN (inter) tier, intra_* the ICI tier
+        plan = faults_mod.TieredFaultPlan(
+            intra=faults_mod.FaultPlan(
+                seed=faults_mod.fault_seed_for(fault_seed, "intra"),
+                drop_rate=intra_drop_rate, stall_rate=intra_stall_rate),
+            inter=faults_mod.FaultPlan(
+                seed=faults_mod.fault_seed_for(fault_seed, "inter"),
+                drop_rate=drop_rate, stall_rate=stall_rate,
+                dropouts=tuple(tuple(d) for d in dropouts)))
+        if plan.trivial:
+            plan = None          # reliable tiers: the fault-free path
+    elif drop_rate or stall_rate or dropouts:
         plan = faults_mod.FaultPlan(
             seed=fault_seed, drop_rate=drop_rate, stall_rate=stall_rate,
             dropouts=tuple(tuple(d) for d in dropouts))
@@ -1055,19 +1668,30 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
         raise ValueError(
             "topology 'none' has no wire to drop packets from; valid "
             "fault-injection topologies: 'server', 'ring', 'gossip', "
-            "'async_stale', 'push_sum'")
+            "'async_stale', 'push_sum', 'hierarchical'")
     c = codecs_mod.get_codec(codec, impl=impl, chunk=chunk,
-                             topk_frac=topk_frac, seed=seed)
+                             topk_frac=topk_frac,
+                             seed=faults_mod.codec_seed(seed, "params"))
     # moment streams share one codec instance seeded apart from the params
     # stream so their stochastic-rounding bits are independent of it
+    # (registry lane "moments" — faults.CODEC_SEED_OFFSETS)
     mc = (_FP32 if moment_codec == "fp32" else
           codecs_mod.get_codec(moment_codec, impl=impl, chunk=chunk,
-                               topk_frac=topk_frac, seed=seed + 1))
+                               topk_frac=topk_frac,
+                               seed=faults_mod.codec_seed(seed,
+                                                          "moments")))
     # the downlink codec gets its own seed lane too (its rounding bits
     # must not correlate with either uplink stream's)
     dc = (codecs_mod.get_codec(downlink_codec, impl=impl, chunk=chunk,
-                               topk_frac=topk_frac, seed=seed + 2)
+                               topk_frac=topk_frac,
+                               seed=faults_mod.codec_seed(seed,
+                                                          "downlink"))
           if downlink_codec else None)
+    # the cross-tier codec draws from the registry's "inter" lane
+    xc = (codecs_mod.get_codec(inter_codec, impl=impl, chunk=chunk,
+                               topk_frac=topk_frac,
+                               seed=faults_mod.codec_seed(seed, "inter"))
+          if inter_codec else None)
     w = None
     if topology in ("ring", "gossip"):
         w = topo_mod.mixing_matrix(topology, n_groups, seed=seed)
@@ -1075,7 +1699,9 @@ def get_exchange(topology: str = "server", codec: str = "fp32",
                     mix_rounds=mix_rounds,
                     staleness=staleness if topology == "async_stale" else 0,
                     w=w, moment_codec=mc, downlink_codec=dc, fused=fused,
-                    fault_plan=plan, overlap=overlap)
+                    fault_plan=plan, overlap=overlap, n_pods=n_pods,
+                    intra_topology=intra_topology,
+                    inter_topology=inter_topology, inter_codec=xc)
 
 
 def default_exchange(n_groups: int) -> Exchange:

@@ -40,15 +40,79 @@ over it like the Exchange itself.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
-# hash lanes keeping the mask families statistically independent
-_LANE_EDGE = 1
-_LANE_STALL = 2
-_LANE_PUSH = 3
-_LANE_MATRIX = 4
+# ---------------------------------------------------------------------------
+# Named seed-lane registry (the ONE place rng-lane allocation lives).
+#
+# Two independent namespaces, both replayable from a single user seed:
+#
+# * HASH_LANES — the splitmix32 lane constants mixed into ``FaultPlan._key``
+#   keeping its mask families statistically independent of each other.
+# * CODEC_SEED_OFFSETS / FAULT_SEED_OFFSETS — derived-seed offsets: each
+#   independent rng CONSUMER gets ``base_seed + offset`` so its bits never
+#   correlate with a sibling consumer of the same base seed (the moment
+#   codec's historical ``seed + 1`` and the downlink codec's ad-hoc
+#   ``seed + 2`` now live here by name, alongside the per-tier fault and
+#   cross-tier codec lanes). A new consumer MUST claim a fresh offset in
+#   its namespace — tests/test_faults.py asserts uniqueness so a collision
+#   fails loudly instead of silently correlating two mask families.
+# ---------------------------------------------------------------------------
+
+HASH_LANES = {
+    "fault/edge": 1,
+    "fault/stall": 2,
+    "fault/push": 3,
+    "fault/matrix": 4,
+}
+
+# offsets on the --seed (codec) base: one per independent codec consumer
+CODEC_SEED_OFFSETS = {
+    "params": 0,       # the uplink params codec (the base itself)
+    "moments": 1,      # every moment stream's codec (DESIGN.md §10)
+    "downlink": 2,     # the broadcast-reply codec (DESIGN.md §11)
+    "inter": 3,        # the hierarchical cross-tier codec (DESIGN.md §16)
+}
+
+# offsets on the --fault-seed base: one per independent fault plan
+FAULT_SEED_OFFSETS = {
+    "flat": 0,         # a single-tier FaultPlan (the base itself)
+    "intra": 1,        # the hierarchical intra-pod (ICI) tier
+    "inter": 2,        # the hierarchical cross-pod (DCN) tier
+}
+
+
+def hash_lane(name: str) -> int:
+    """The registered splitmix32 hash-lane constant for ``name``."""
+    if name not in HASH_LANES:
+        raise ValueError(f"unknown hash lane {name!r}: valid lanes are "
+                         f"{tuple(HASH_LANES)}")
+    return HASH_LANES[name]
+
+
+def codec_seed(base: int, consumer: str) -> int:
+    """The derived seed for a named codec consumer of ``base``."""
+    if consumer not in CODEC_SEED_OFFSETS:
+        raise ValueError(f"unknown codec seed lane {consumer!r}: valid "
+                         f"lanes are {tuple(CODEC_SEED_OFFSETS)}")
+    return (base + CODEC_SEED_OFFSETS[consumer]) & 0xFFFFFFFF
+
+
+def fault_seed_for(base: int, tier: str) -> int:
+    """The derived seed for a named fault-plan tier of ``base``."""
+    if tier not in FAULT_SEED_OFFSETS:
+        raise ValueError(f"unknown fault seed tier {tier!r}: valid "
+                         f"tiers are {tuple(FAULT_SEED_OFFSETS)}")
+    return (base + FAULT_SEED_OFFSETS[tier]) & 0xFFFFFFFF
+
+
+# legacy aliases (every mask call routes through the registry now)
+_LANE_EDGE = HASH_LANES["fault/edge"]
+_LANE_STALL = HASH_LANES["fault/stall"]
+_LANE_PUSH = HASH_LANES["fault/push"]
+_LANE_MATRIX = HASH_LANES["fault/matrix"]
 
 _GOLD = 0x9E3779B9          # 2^32 / golden ratio: Weyl-sequence stride
 
@@ -151,3 +215,43 @@ class FaultPlan:
         never leaves it, and a live node's push drops at ``drop_rate``."""
         m = self._deliver(self._key(_LANE_PUSH, rnd), (n,))
         return m * self.active_mask(rnd, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredFaultPlan:
+    """Per-tier fault schedule for the hierarchical topology
+    (DESIGN.md §16): ``intra`` governs pod-internal (ICI) hops,
+    ``inter`` governs cross-pod (DCN) transmissions. The tiers draw
+    from INDEPENDENT seed lanes (``fault_seed_for(base, tier)``), so
+    one user-facing ``--fault-seed`` yields uncorrelated mask families
+    per tier. Either tier may be None (= that tier is reliable); both
+    None is the trivial plan and is normalized away by ``get_exchange``
+    exactly like a trivial flat ``FaultPlan``."""
+    intra: Optional[FaultPlan] = None
+    inter: Optional[FaultPlan] = None
+
+    def __post_init__(self):
+        # normalize trivial tiers to None so "reliable tier" has ONE
+        # representation and the fast paths key off `is None` alone
+        if self.intra is not None and self.intra.trivial:
+            object.__setattr__(self, "intra", None)
+        if self.inter is not None and self.inter.trivial:
+            object.__setattr__(self, "inter", None)
+
+    @property
+    def trivial(self) -> bool:
+        return self.intra is None and self.inter is None
+
+    @property
+    def expected_delivery_intra(self) -> float:
+        return 1.0 if self.intra is None else self.intra.expected_delivery
+
+    @property
+    def expected_delivery_inter(self) -> float:
+        return 1.0 if self.inter is None else self.inter.expected_delivery
+
+    @property
+    def expected_delivery(self) -> float:
+        """Conservative overall delivery rate: the product of the tier
+        rates (a round's payload crosses whichever tiers it touches)."""
+        return self.expected_delivery_intra * self.expected_delivery_inter

@@ -98,6 +98,35 @@ def push_sum_offsets(m: int) -> tuple:
     return (1, m - 1)
 
 
+def pod_size(g: int, n_pods: int) -> int:
+    """Validated pod size for the hierarchical topology (DESIGN.md §16):
+    the G group axis factors into ``n_pods`` CONTIGUOUS pods of equal
+    size — group g lives in pod ``g // pod_size``. Contiguity is what
+    makes the intra-pod hop a pod-local circulant (a ``jnp.roll`` along
+    the within-pod axis) and the cross-pod hop a stride-``pod_size``
+    circulant, both expressible as single ppermutes under shard_map."""
+    if n_pods < 1:
+        raise ValueError(f"n_pods {n_pods} must be >= 1")
+    if g % n_pods != 0:
+        raise ValueError(
+            f"hierarchical topology needs n_pods ({n_pods}) to divide "
+            f"n_groups ({g}) into equal contiguous pods; valid pod counts "
+            f"for G={g} are the divisors of G")
+    return g // n_pods
+
+
+def ring_circulant(m: int):
+    """Circulant decomposition ``(w_self, offsets, w_edge)`` of the
+    symmetric ring over m nodes: x_i <- w_self*x_i + w_edge*sum_d
+    x_{(i+d) % m}. Matches ``ring_matrix`` exactly (m <= 2 degenerates
+    to the dense mean, which is still circulant at those sizes)."""
+    if m <= 1:
+        return 1.0, (), 0.0
+    if m == 2:
+        return 0.5, (1,), 0.5
+    return 1.0 / 3.0, (1, m - 1), 1.0 / 3.0
+
+
 def is_doubly_stochastic(w: np.ndarray, tol: float = 1e-9) -> bool:
     return (np.all(w >= -tol)
             and np.allclose(w.sum(axis=0), 1.0, atol=tol)

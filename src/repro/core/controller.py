@@ -56,6 +56,7 @@ class AdaptiveT:
     def from_exchange(cls, step_time_s: float, exchange, n_params: int,
                       moment_sizes=None, *,
                       bandwidth_bytes_per_s: float = 50e9,
+                      inter_bandwidth_bytes_per_s: Optional[float] = None,
                       delivery_rate: Optional[float] = None,
                       **kw) -> "AdaptiveT":
         """r priced from an Exchange's OWN stream-resolved accounting
@@ -75,7 +76,29 @@ class AdaptiveT:
         expectation) divides the accounted bytes by the expected
         delivery fraction, so faults make communication more expensive
         per useful round, shrink r, and push T* UP — fewer, longer
-        rounds on an unreliable network."""
+        rounds on an unreliable network.
+
+        Hierarchical exchanges (DESIGN.md §16) price the two tiers on
+        their OWN links: the intra-pod bytes over
+        ``bandwidth_bytes_per_s`` at the intra tier's delivery rate, the
+        cross-pod bytes over ``inter_bandwidth_bytes_per_s`` (the slower
+        DCN; defaults to the intra bandwidth) at the inter tier's — a
+        lossy DCN raises only the cross-pod term, which is usually the
+        dominant one, so T* still moves the right way."""
+        if getattr(exchange, "hierarchical", False):
+            by_tier = exchange.wire_bytes_by_tier(
+                n_params, moment_sizes=moment_sizes)
+            bw_x = inter_bandwidth_bytes_per_s or bandwidth_bytes_per_s
+            d_i = exchange.delivery_rate_intra
+            d_x = exchange.delivery_rate_inter
+            if not (0.0 < d_i <= 1.0 and 0.0 < d_x <= 1.0):
+                raise ValueError(f"per-tier delivery rates ({d_i}, {d_x}) "
+                                 "not in (0, 1]")
+            comm_s = (by_tier["intra"] / (bandwidth_bytes_per_s * d_i)
+                      + by_tier["inter"] / (bw_x * d_x))
+            if comm_s <= 0:
+                raise ValueError(f"non-positive comm time {comm_s}")
+            return cls(r=step_time_s / comm_s, **kw)
         wire = exchange.wire_bytes_per_round(n_params,
                                              moment_sizes=moment_sizes)
         if delivery_rate is None:
@@ -128,7 +151,18 @@ class OnlineT:
       sqrt(c₀ / consensus_pre) (clipped to [1, relief_max]), which ramps
       T up as consensus distance falls below its initial mass c₀. Fewer
       rounds at the tail is where online-T beats static T* on total
-      wire bytes.
+      wire bytes;
+    * **divergence guard** (DESIGN.md §14): the round map for consensus
+      mass is c ← γ̂ · c · e^{a·T} — local steps grow deviation at a
+      measured per-step exponent a (drift gain = consensus_pre of this
+      round over consensus_post of the previous one, spread over the T
+      steps between them), the exchange contracts it by γ̂. The map is
+      stable only for T < ln(1/γ̂)/a; when the measured â is positive T
+      is CLAMPED to guard_margin · ln(1/γ̂)/â. The multiplicative
+      (1 − γ̂) factor slows T growth but cannot bound it when the
+      relief/cost terms push harder; the clamp is what actually keeps
+      aggressive-lr decentralized runs (the §14 divergent corner) from
+      compounding consensus mass round over round.
 
     The cost-optimal core is still the paper's Sec-4 T* from the fitted
     decay order; the two telemetry factors multiply it, and the result
@@ -145,9 +179,12 @@ class OnlineT:
     r_ema: float = 0.7          # smoothing of the measured cost ratio
     guard_ema: float = 0.5      # smoothing of the consensus guard
     relief_max: float = 8.0     # cap on the convergence relief factor
+    guard_margin: float = 0.5   # stay this far inside the stability edge
     _t: float = 10.0
     _gamma: float = 0.0
     _c0: Optional[float] = None
+    _a: float = 0.0             # EMA'd per-step drift exponent â
+    _prev_post: Optional[float] = None
     history: Optional[List] = None
 
     def __post_init__(self):
@@ -184,6 +221,16 @@ class OnlineT:
                 (consensus_post + codec_err) / consensus_pre, 0.0, 0.95))
             self._gamma = (self.guard_ema * self._gamma
                            + (1.0 - self.guard_ema) * gamma)
+        # -- divergence guard: measured per-step drift exponent -----------
+        if (consensus_pre is not None and self._prev_post is not None
+                and self._prev_post > 0.0 and consensus_pre > 0.0
+                and t_used >= 1):
+            drift_gain = consensus_pre / self._prev_post
+            a_meas = float(np.log(max(drift_gain, 1.0 + 1e-6))) / t_used
+            self._a = (self.guard_ema * self._a
+                       + (1.0 - self.guard_ema) * a_meas)
+        if consensus_post is not None:
+            self._prev_post = float(consensus_post)
         # -- convergence relief -------------------------------------------
         relief = 1.0
         if consensus_pre is not None and consensus_pre > 0.0:
@@ -203,7 +250,15 @@ class OnlineT:
             t_cost = self._t
         target = t_cost * (1.0 - self._gamma) * relief
         self._t = self.ema * self._t + (1.0 - self.ema) * target
+        # -- stability clamp: T < guard_margin * ln(1/γ̂) / â --------------
+        t_guard = None
+        if self._a > 0.0 and self._gamma > 0.0:
+            t_guard = int(np.floor(
+                self.guard_margin
+                * np.log(1.0 / (self._gamma + 1e-6)) / self._a))
+            self._t = min(self._t, float(max(t_guard, self.t_min)))
         self.history.append({"r": self.r, "gamma": self._gamma,
                              "relief": relief, "t_cost": t_cost,
+                             "a": self._a, "t_guard": t_guard,
                              "t": self.t})
         return self.t

@@ -141,6 +141,15 @@ def _check_comm_state(exch, state_G, mkeys=()):
             "per-group staleness buffers; build the train state with "
             "init_state(..., exchange=...) so comm['pushed'] is "
             "allocated (DESIGN.md §12)")
+    if (exch.hierarchical and exch.inter_topology == "push_sum"
+            and exch.n_pods > 1
+            and "mass" not in state_G.get("comm", {})):
+        raise ValueError(
+            "hierarchical push_sum inter tier is ratio consensus: every "
+            "round needs the pod-level mass counters and per-edge "
+            "backlogs; build the train state with init_state(..., "
+            "exchange=...) so comm['mass'] / comm['backlog'] are "
+            "allocated (DESIGN.md §16)")
     if exch.overlap and "inflight" not in state_G.get("comm", {}):
         raise ValueError(
             "an overlapped exchange double-buffers the previous round's "
@@ -167,10 +176,15 @@ def _round_wire_bytes(exch, params_G, opt_G, avg_opt: bool,
             k: sum(l.size // n_groups for l in jax.tree.leaves(v))
             for k, v in opt_G.items() if k != "count"}
     by_stream = exch.wire_bytes_by_stream(n, moment_sizes)
+    by_tier = exch.wire_bytes_by_tier(n, moment_sizes)
     out = {"wire_bytes": sum(by_stream.values()),
            "wire_bytes_up": exch.wire_bytes_up(n, moment_sizes=moment_sizes),
            "wire_bytes_down": exch.wire_bytes_down(
-               n, moment_sizes=moment_sizes)}
+               n, moment_sizes=moment_sizes),
+           # per-tier totals (DESIGN.md §16): flat topologies put the
+           # whole wire on the intra tier (one big pod), inter = 0
+           "wire_bytes_intra": by_tier["intra"],
+           "wire_bytes_inter": by_tier["inter"]}
     out.update({f"wire_bytes/{k}": v for k, v in by_stream.items()})
     return out
 
@@ -279,6 +293,21 @@ def _obs_round_metrics(exch, comm_state: dict, streams, consensus_pre,
                           if part is not None
                           else jnp.ones((), jnp.float32))
     m["delivery_rate"] = jnp.asarray(exch.delivery_rate, jnp.float32)
+    # per-tier participation/delivery (DESIGN.md §16). Flat single-tier
+    # convention: the whole wire is the intra tier, so intra mirrors the
+    # overall number and the (nonexistent) inter tier reports 1.0
+    part_i = comm_state.get("participation_intra")
+    m["participation_intra"] = (jnp.asarray(part_i, jnp.float32)
+                                if part_i is not None
+                                else m["participation"])
+    part_x = comm_state.get("participation_inter")
+    m["participation_inter"] = (jnp.asarray(part_x, jnp.float32)
+                                if part_x is not None
+                                else jnp.ones((), jnp.float32))
+    m["delivery_rate_intra"] = jnp.asarray(exch.delivery_rate_intra,
+                                           jnp.float32)
+    m["delivery_rate_inter"] = jnp.asarray(exch.delivery_rate_inter,
+                                           jnp.float32)
     return m
 
 
@@ -399,10 +428,10 @@ def make_local_round(loss_fn: Callable, opt: Optimizer, cfg: LocalSGDConfig,
         # lossy codecs transmit each stream's round delta vs these
         # (identity codecs never touch x0, keeping the default bit-exact)
         xs0 = {}
-        if not exch.codec.identity:
+        if exch.lossy_stream("params"):
             xs0["params"] = st["params"]
-        if not exch.mcodec.identity:
-            xs0.update({k: st["opt"][k] for k in mkeys})
+        xs0.update({k: st["opt"][k] for k in mkeys
+                    if exch.lossy_stream(k)})
         if cfg.t_i is not None and cfg.inner_mode == "fixed_batch":
             assert len(cfg.t_i) == cfg.n_groups, cfg.t_i
             assert max(cfg.t_i) <= cfg.inner_steps, cfg.t_i
@@ -541,10 +570,10 @@ def _make_packed_local_round(loss_fn: Callable, opt: Optimizer,
         # lossy codecs transmit each stream's round delta vs these
         # (identity codecs never touch x0: bit-exact + donatable)
         xs0 = {}
-        if not exch.codec.identity:
+        if exch.lossy_stream("params"):
             xs0["params"] = state_G["params"]
-        if not exch.mcodec.identity:
-            xs0.update({k: state_G["opt"][k] for k in mkeys})
+        xs0.update({k: state_G["opt"][k] for k in mkeys
+                    if exch.lossy_stream(k)})
         t_vec = (jnp.asarray(cfg.t_i, jnp.int32)
                  if cfg.t_i is not None else None)
         if exch.overlap:

@@ -148,7 +148,12 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                      downlink_codec: str = "", drop_rate: float = 0.0,
                      stall_rate: float = 0.0,
                      fault_seed: int = 0,
-                     overlap: bool = False) -> BuiltStep:
+                     overlap: bool = False, n_pods: int = 0,
+                     intra_topology: str = "ring",
+                     inter_topology: str = "push_sum",
+                     inter_codec: str = "",
+                     intra_drop_rate: float = 0.0,
+                     intra_stall_rate: float = 0.0) -> BuiltStep:
     """policy (see sharding.specs.spec_for): "tp" (baseline), "dp"
     (replicate params, batch over the model axis — small archs), or "tp"
     on an fsdp mesh (params additionally sharded over "fsdp").
@@ -173,7 +178,9 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
     "auto" (pallas where supported, else jnp)."""
     if mode == "sync" and (comm != "server" or codec != "fp32"
                            or moment_codec != "fp32" or downlink_codec
-                           or drop_rate or stall_rate or overlap):
+                           or drop_rate or stall_rate or overlap
+                           or n_pods or inter_codec
+                           or intra_drop_rate or intra_stall_rate):
         raise ValueError(
             "comm/codec/fault flags select the local-SGD model exchange; "
             "sync-DP all-reduces gradients every step and has no "
@@ -213,7 +220,9 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                         mix_rounds, staleness, impl,
                                         moment_codec, downlink_codec,
                                         drop_rate, stall_rate, fault_seed,
-                                        overlap)
+                                        overlap, n_pods, intra_topology,
+                                        inter_topology, inter_codec,
+                                        intra_drop_rate, intra_stall_rate)
     if impl != "auto":
         # same no-silent-fallback rule as optim.get: the pytree round has
         # no fused-kernel path for impl to select
@@ -252,7 +261,12 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                         drop_rate=drop_rate,
                                         stall_rate=stall_rate,
                                         fault_seed=fault_seed,
-                                        overlap=overlap)
+                                        overlap=overlap, n_pods=n_pods,
+                                        intra_topology=intra_topology,
+                                        inter_topology=inter_topology,
+                                        inter_codec=inter_codec,
+                                        intra_drop_rate=intra_drop_rate,
+                                        intra_stall_rate=intra_stall_rate)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -307,6 +321,8 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
              n_p, moment_sizes=moment_sizes),
          "wire_bytes_per_round_by_stream": exchange.wire_bytes_by_stream(
              n_p, moment_sizes),
+         "wire_bytes_per_round_by_tier": exchange.wire_bytes_by_tier(
+             n_p, moment_sizes),
          "delivery_rate": exchange.delivery_rate,
          "metrics_schema": list(obs.round_metric_keys(
              ("params",) + tuple(moment_sizes)))})
@@ -340,7 +356,12 @@ def _build_exchange(comm: str, codec: str, n_groups: int,
                     impl: str = "jnp", moment_codec: str = "fp32",
                     downlink_codec: str = "", drop_rate: float = 0.0,
                     stall_rate: float = 0.0, fault_seed: int = 0,
-                    overlap: bool = False):
+                    overlap: bool = False, n_pods: int = 0,
+                    intra_topology: str = "ring",
+                    inter_topology: str = "push_sum",
+                    inter_codec: str = "",
+                    intra_drop_rate: float = 0.0,
+                    intra_stall_rate: float = 0.0):
     """Exchange for a mesh step builder; ``impl`` selects the codec
     kernels and must already be resolved for the execution path
     (``_packed_impl`` — shard_map runs the Pallas quantize kernels on
@@ -358,7 +379,12 @@ def _build_exchange(comm: str, codec: str, n_groups: int,
                                      drop_rate=drop_rate,
                                      stall_rate=stall_rate,
                                      fault_seed=fault_seed,
-                                     overlap=overlap)
+                                     overlap=overlap, n_pods=n_pods,
+                                     intra_topology=intra_topology,
+                                     inter_topology=inter_topology,
+                                     inter_codec=inter_codec,
+                                     intra_drop_rate=intra_drop_rate,
+                                     intra_stall_rate=intra_stall_rate)
     return exchange, exchange.supports_opt_state_averaging
 
 
@@ -438,7 +464,12 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                              drop_rate: float = 0.0,
                              stall_rate: float = 0.0,
                              fault_seed: int = 0,
-                             overlap: bool = False) -> BuiltStep:
+                             overlap: bool = False, n_pods: int = 0,
+                             intra_topology: str = "ring",
+                             inter_topology: str = "push_sum",
+                             inter_codec: str = "",
+                             intra_drop_rate: float = 0.0,
+                             intra_stall_rate: float = 0.0) -> BuiltStep:
     """Flat-buffer train step (DESIGN.md §6/§9): one (G, Np) f32 buffer
     per state part, donated so XLA updates the model in place across the
     T-step round. When the mesh has an in-group axis ("model"/"fsdp" > 1)
@@ -484,7 +515,12 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
                                         drop_rate=drop_rate,
                                         stall_rate=stall_rate,
                                         fault_seed=fault_seed,
-                                        overlap=overlap)
+                                        overlap=overlap, n_pods=n_pods,
+                                        intra_topology=intra_topology,
+                                        inter_topology=inter_topology,
+                                        inter_codec=inter_codec,
+                                        intra_drop_rate=intra_drop_rate,
+                                        intra_stall_rate=intra_stall_rate)
     lcfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t_inner,
                                inner_mode="fixed_batch",
                                average_opt_state=avg_opt)
@@ -532,6 +568,8 @@ def _build_packed_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
          "wire_bytes_down_per_round": exchange.wire_bytes_down(
              n_wire, moment_sizes=moment_sizes),
          "wire_bytes_per_round_by_stream": exchange.wire_bytes_by_stream(
+             n_wire, moment_sizes),
+         "wire_bytes_per_round_by_tier": exchange.wire_bytes_by_tier(
              n_wire, moment_sizes),
          "delivery_rate": exchange.delivery_rate,
          "metrics_schema": list(obs.round_metric_keys(

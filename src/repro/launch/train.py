@@ -120,10 +120,35 @@ def main() -> None:
                          "count=N)")
     ap.add_argument("--comm", "--topology", dest="comm", default="server",
                     choices=["server", "ring", "gossip", "async_stale",
-                             "push_sum", "none"],
+                             "push_sum", "hierarchical", "none"],
                     help="exchange topology (repro.comm, DESIGN.md §8; "
                          "push_sum is loss-tolerant ratio consensus, "
-                         "DESIGN.md §12)")
+                         "DESIGN.md §12; hierarchical is the two-tier "
+                         "pod/DCN factoring, DESIGN.md §16)")
+    ap.add_argument("--n-pods", type=int, default=0,
+                    help="hierarchical only: pod count P; must divide "
+                         "--groups (pods of G/P nodes, DESIGN.md §16)")
+    ap.add_argument("--intra-topology", default="ring",
+                    choices=["ring", "server"],
+                    help="hierarchical within-pod stage (reliable "
+                         "interconnect tier)")
+    ap.add_argument("--inter-topology", default="push_sum",
+                    choices=["push_sum", "server"],
+                    help="hierarchical cross-pod stage: push_sum ratio "
+                         "consensus over the lossy DCN, or the reliable "
+                         "parameter-server baseline")
+    ap.add_argument("--inter-codec", default="",
+                    choices=["", "fp32", "fp16", "bf16", "int8", "int8z"],
+                    help="independent wire codec for the cross-pod tier "
+                         "(DESIGN.md §16); default: same as --codec. "
+                         "int8/int8z need --inter-topology server")
+    ap.add_argument("--intra-drop-rate", type=float, default=0.0,
+                    help="hierarchical: per-edge drop probability on the "
+                         "within-pod tier (its own seed lane; --drop-rate "
+                         "arms the cross-pod tier)")
+    ap.add_argument("--intra-stall-rate", type=float, default=0.0,
+                    help="hierarchical: per-round node stall probability "
+                         "on the within-pod tier")
     ap.add_argument("--codec", default="fp32",
                     choices=["fp32", "fp16", "bf16", "int8", "int8z",
                              "topk"],
@@ -184,7 +209,10 @@ def main() -> None:
                                 or args.codec != "fp32"
                                 or args.moment_codec != "fp32"
                                 or args.downlink_codec or args.overlap
-                                or args.drop_rate or args.stall_rate):
+                                or args.drop_rate or args.stall_rate
+                                or args.n_pods or args.inter_codec
+                                or args.intra_drop_rate
+                                or args.intra_stall_rate):
         ap.error("--comm/--codec/--drop-rate select the local-SGD model "
                  "exchange; sync-DP all-reduces gradients every step and "
                  "has no exchange to configure")
@@ -279,7 +307,12 @@ def main() -> None:
             moment_codec=args.moment_codec,
             downlink_codec=args.downlink_codec,
             drop_rate=args.drop_rate, stall_rate=args.stall_rate,
-            fault_seed=args.fault_seed, overlap=args.overlap)
+            fault_seed=args.fault_seed, overlap=args.overlap,
+            n_pods=args.n_pods, intra_topology=args.intra_topology,
+            inter_topology=args.inter_topology,
+            inter_codec=args.inter_codec,
+            intra_drop_rate=args.intra_drop_rate,
+            intra_stall_rate=args.intra_stall_rate)
         # every topology averages opt state now that the per-stream
         # staleness buffers exist (DESIGN.md §10)
         avg_opt = exchange.supports_opt_state_averaging

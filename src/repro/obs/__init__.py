@@ -28,8 +28,11 @@ SCHEMA_VERSION = 1
 ROUND_KEYS = (
     "loss", "grad_sq", "inner_steps",
     "wire_bytes", "wire_bytes_up", "wire_bytes_down",
+    "wire_bytes_intra", "wire_bytes_inter",
     "consensus_sq", "consensus_sq_post",
     "backlog_mass", "participation", "delivery_rate",
+    "participation_intra", "participation_inter",
+    "delivery_rate_intra", "delivery_rate_inter",
 )
 
 # host-measured phase names the launchers emit (checkpoint only appears

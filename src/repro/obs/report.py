@@ -117,18 +117,32 @@ def check(meta: dict, records: List[dict]) -> List[str]:
                 f"!= sum of per-stream splits {int(split)}")
             break
         up, down = m.get("wire_bytes_up"), m.get("wire_bytes_down")
-        if ("wire_bytes" in m and up is not None and down is not None
-                and int(m["wire_bytes"]) not in (int(up) + int(down),
-                                                 int(up))):
+        ti, tx = m.get("wire_bytes_intra"), m.get("wire_bytes_inter")
+        allowed = set()
+        if up is not None and down is not None:
             # total == up + down (server/async: distinct payloads) or
             # total == up == down (p2p edges count once) — DESIGN.md §13
+            allowed |= {int(up) + int(down), int(up)}
+        if ti is not None and tx is not None:
+            # the per-tier identity (DESIGN.md §16): hierarchical rounds
+            # mix p2p and server pricing across tiers, so the sum of the
+            # tier totals is the authoritative decomposition
+            allowed.add(int(ti) + int(tx))
+        if ("wire_bytes" in m and allowed
+                and int(m["wire_bytes"]) not in allowed):
             problems.append(
                 f"round {r.get('round')}: wire_bytes {m['wire_bytes']} "
-                f"is neither up+down ({up}+{down}) nor up ({up})")
+                f"is neither up+down ({up}+{down}), up ({up}), nor "
+                f"intra+inter ({ti}+{tx})")
             break
-        if not (0.0 <= float(m.get("participation", 1.0)) <= 1.0):
-            problems.append(f"round {r.get('round')}: participation "
-                            f"{m.get('participation')} outside [0, 1]")
+        bad_part = next(
+            (k for k in ("participation", "participation_intra",
+                         "participation_inter", "delivery_rate",
+                         "delivery_rate_intra", "delivery_rate_inter")
+             if not 0.0 <= float(m.get(k, 1.0)) <= 1.0), None)
+        if bad_part is not None:
+            problems.append(f"round {r.get('round')}: {bad_part} "
+                            f"{m.get(bad_part)} outside [0, 1]")
             break
     return problems
 
@@ -170,6 +184,25 @@ def summarize(meta: dict, records: List[dict]) -> dict:
     out["wire_bytes_by_stream"] = wire
     out["wire_bytes_total"] = sum(
         int(r["metrics"].get("wire_bytes", 0)) for r in rounds)
+    out["wire_bytes_by_tier"] = {
+        t: sum(int(r["metrics"].get(f"wire_bytes_{t}", 0))
+               for r in rounds)
+        for t in ("intra", "inter")}
+    # serve-engine admission counters (DESIGN.md §15/§16): queue depth
+    # and FreeList backpressure across the kind="step" records
+    queued = [float(r["metrics"]["queued"]) for r in steps
+              if "queued" in r.get("metrics", {})]
+    if queued:
+        serve = {"queued_mean": float(np.mean(queued)),
+                 "queued_max": float(max(queued))}
+        deferred = [int(r["metrics"].get("deferred_total", 0))
+                    for r in steps]
+        serve["deferred_total"] = max(deferred) if deferred else 0
+        free = [int(r["metrics"]["free_rows"]) for r in steps
+                if "free_rows" in r.get("metrics", {})]
+        if free:
+            serve["free_rows_min"] = min(free)
+        out["serve"] = serve
     cons = [float(np.mean(r["metrics"]["consensus_sq"])) for r in rounds
             if "consensus_sq" in r.get("metrics", {})]
     if cons:
@@ -223,6 +256,18 @@ def main(argv=None) -> int:
         per = ", ".join(f"{k}={v:,}B"
                         for k, v in s["wire_bytes_by_stream"].items())
         print(f"  wire  total {tot:,}B  ({per})")
+        tiers = s.get("wire_bytes_by_tier", {})
+        if any(tiers.values()):
+            print(f"  wire  by tier intra {tiers.get('intra', 0):,}B  "
+                  f"inter {tiers.get('inter', 0):,}B")
+    if "serve" in s:
+        sv = s["serve"]
+        line = (f"  serve queued mean {sv['queued_mean']:.1f}  "
+                f"max {sv['queued_max']:.0f}  "
+                f"deferred total {sv['deferred_total']}")
+        if "free_rows_min" in sv:
+            line += f"  free rows min {sv['free_rows_min']}"
+        print(line)
     if "overlap_efficiency" in s:
         print(f"  overlap efficiency (1 - exposed/total exchange) "
               f"{s['overlap_efficiency']:.3f}")

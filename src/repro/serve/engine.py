@@ -111,6 +111,8 @@ class Engine:
         self.queue: deque = deque()
         self.trace = trace if trace is not None else Trace(None)
         self.step_idx = 0
+        self.deferred_total = 0   # cumulative admissions deferred by the
+        #                           FreeList (backpressure, DESIGN.md §15)
         g = self.geom
         self._tshape = (max(g.n_layers_kv, 1), max(g.max_blocks, 1))
         self._sshape = (max(g.state_rows, 1),)
@@ -184,14 +186,16 @@ class Engine:
     def step(self) -> StepReport:
         """One scheduler tick: admit -> batched decode -> commit/retire.
         Emits one kind="step" trace record with fenced phase durations."""
-        admitted = 0
+        admitted, deferred = 0, 0
         can_admit = (self.cfg.policy == "continuous"
                      or self.n_active() == 0)
         while can_admit and self.queue and None in self.slots:
             if not self._admit(self.slots.index(None), self.queue[0]):
+                deferred += 1        # free slot, but the pool said no
                 break
             self.queue.popleft()
             admitted += 1
+        self.deferred_total += deferred
         completions: List[Completion] = []
         committed = admitted      # each prefill committed one token
         for i, s in enumerate(self.slots):
@@ -216,7 +220,9 @@ class Engine:
         self.trace.emit_round(self.step_idx, metrics={
             "active": self.n_active(), "queued": len(self.queue),
             "admitted": admitted, "committed": committed,
-            "completed": len(completions)}, kind="step")
+            "completed": len(completions), "deferred": deferred,
+            "deferred_total": self.deferred_total,
+            "free_rows": self.free.available()}, kind="step")
         self.step_idx += 1
         return StepReport(prefill_s, decode_s, admitted, committed,
                           completions)

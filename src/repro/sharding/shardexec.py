@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.comm import faults as faults_mod
 from repro.comm import topology as topo_mod
 from repro.optim import packing
 
@@ -374,6 +375,8 @@ class ShardExec:
         """
         if exch.topology == "push_sum":
             return self._push_sum_fn(exch, layout)
+        if exch.topology == "hierarchical":
+            return self._hier_fn(exch, layout)
         for c in (exch.codec, exch.mcodec):
             if not (c.shardable or c.identity):
                 raise NotImplementedError(
@@ -721,6 +724,327 @@ class ShardExec:
             new_state["round"] = rnd + 1
             new_state["participation"] = jnp.mean(masks)
             return dict(zip(names, mixed_t)), new_state
+
+        return fn
+
+    def _hier_fn(self, exch, layout: packing.Layout):
+        """shard_map'd two-tier hierarchical round (DESIGN.md §16),
+        semantics-matched to ``Exchange._hier_streams``. Stage A mixes
+        WITHIN each contiguous pod — one ``ppermute`` per pod-circulant
+        offset (the contiguous tier factoring is exactly what makes the
+        pod-local roll a single device permutation). Stage B is the
+        cross-pod tier: pod-level push_sum ratio consensus over
+        stride-``pod_size`` ppermutes with mass-conserving backlogs, or
+        the leader-mean server step (a ``psum`` of the elected leaders'
+        decoded payloads, int8 cross-tier codec included). Every fault
+        mask, liveness vector, leader weight and rounding-noise tensor
+        is generated OUTSIDE the block at full (G,) shape — the exact
+        arrays the replicated path consumes — so sharded and replicated
+        rounds agree to fp32 tolerance (the per-member summation order
+        differs, nothing else)."""
+        from repro.comm.exchange import elect_leaders
+        plan = exch.fault_plan
+        if plan is not None and not isinstance(plan,
+                                               faults_mod.TieredFaultPlan):
+            raise NotImplementedError(
+                "hierarchical faults are per-tier: a flat FaultPlan does "
+                "not say WHICH tier it masks — wrap it as "
+                "faults.TieredFaultPlan(intra=..., inter=...); valid "
+                "tiers: 'intra' (pod-internal), 'inter' (cross-pod)")
+        for c in (exch.codec, exch.mcodec):
+            if not (c.identity or c.name in ("fp16", "bf16")):
+                raise NotImplementedError(
+                    f"hierarchical intra tier + {c.name}: pod-internal "
+                    "hops carry whole-value payloads, not round deltas "
+                    "(DESIGN.md §16); valid intra codecs: 'fp32', "
+                    "'fp16', 'bf16' — put int8 on the cross-tier wire "
+                    "via inter_codec with inter_topology='server'")
+        inter_cs = ([exch.inter_codec] if exch.inter_codec is not None
+                    else [exch.codec, exch.mcodec])
+        for ic in inter_cs:
+            if exch.inter_topology == "push_sum" and not (
+                    ic.identity or ic.name in ("fp16", "bf16")):
+                raise NotImplementedError(
+                    f"hierarchical push_sum inter tier + {ic.name}: the "
+                    "cross-pod wire carries cumulative (value, weight) "
+                    "mass, not round deltas (DESIGN.md §12/§16); valid "
+                    "push_sum inter codecs: 'fp32', 'fp16', 'bf16' — or "
+                    "inter_topology='server' for 'int8'")
+            if not (ic.shardable or ic.identity):
+                raise NotImplementedError(
+                    f"codec {ic.name!r} is not shardable — run it on the "
+                    "replicated path (DESIGN.md §9)")
+            if (not ic.identity) and ic.chunk > 0:
+                self.check_layout(layout, ic.chunk)
+        self.check_layout(layout)
+        G = self.n_groups
+        n_pods, s = exch.n_pods, exch.pod_len
+        ip, xp = exch.intra_plan, exch.inter_plan
+        hops = exch.mix_rounds
+        offs_p = topo_mod.push_sum_offsets(n_pods)
+        w_self, offs_pod, w_edge = topo_mod.ring_circulant(s)
+        inter_ps = exch.inter_topology == "push_sum"
+        ps_on = inter_ps and bool(offs_p)
+        a_sh = 1.0 / (len(offs_p) + 1.0)
+        spec = self.buf_spec()
+        gax = self._entry(self.group_axes)
+        sax = self._entry(self.shard_axes)
+        gspec = self.group_spec()
+        gentry = self._entry(self.group_axes)
+        dummy_spec = P(None, None)
+
+        def perm_pod(d):
+            # member i receives the block of pod-mate (i + d) % s — the
+            # pod-local circulant expressed on the flat G axis (pods are
+            # contiguous, so src stays inside its own pod)
+            return [(src, (src // s) * s + ((src % s - d) % s))
+                    for src in range(G)]
+
+        def perm_pods(dp):
+            # cross-pod circulant: stride pod_size on the G axis, every
+            # member lane carries 1/pod_size of its pod's traffic
+            return [(src, (src + dp * s) % G) for src in range(G)]
+
+        def fn(xs, xs0, comm_state):
+            names = tuple(xs)
+            codecs = {k: exch.stream_codec(k) for k in names}
+            icodecs = {k: exch.inter_stream_codec(k) for k in names}
+            rnd = comm_state["round"]
+            new_state = dict(comm_state)
+            cstates = dict(comm_state.get("codec", {}))
+            touched = False
+            dummy = jnp.zeros((1, 1), jnp.float32)
+
+            def pod_take(x, d):
+                r = x.reshape((n_pods, s) + x.shape[1:])
+                return jnp.roll(r, -d, axis=1).reshape(x.shape)
+
+            # ---- full-shape mask/noise generation (DESIGN.md §12) ----
+            act_i = (ip.active_mask(rnd, G) if ip is not None
+                     else jnp.ones((G,), jnp.float32))
+            part_intra = jnp.ones((), jnp.float32)
+            masksA, masksA_spec = dummy, dummy_spec
+            delivA, delivA_spec = dummy, dummy_spec
+            denA, denA_spec = dummy, dummy_spec
+            if s > 1 and exch.intra_topology == "ring":
+                rows = []
+                for h in range(hops):
+                    per = []
+                    for di, d in enumerate(offs_pod):
+                        bern = (ip.edge_mask(rnd, h, di, G)
+                                if ip is not None
+                                else jnp.ones((G,), jnp.float32))
+                        per.append(bern * pod_take(act_i, d) * act_i)
+                    rows.append(jnp.stack(per))
+                masksA = jnp.stack(rows)       # (hops, n_offs_pod, G)
+                masksA_spec = P(None, None, gentry)
+                if ip is not None:
+                    part_intra = jnp.mean(masksA)
+            elif s > 1:                        # intra "server"
+                deliv = (ip.push_mask(rnd, G) if ip is not None
+                         else jnp.ones((G,), jnp.float32))
+                # row d = the delivery of the payload arriving at each
+                # member from its pod-mate at offset d (row 0 = self)
+                delivA = jnp.stack([pod_take(deliv, d) for d in range(s)])
+                delivA_spec = P(None, gentry)
+                denA = jnp.repeat(
+                    jnp.sum(deliv.reshape(n_pods, s), axis=1), s)
+                denA_spec = gspec
+                if ip is not None:
+                    part_intra = jnp.mean(deliv)
+            mass = blw = act_pod = incsB = masksB = dummy
+            lead_w = dummy
+            n_live = jnp.ones((), jnp.float32)
+            part_inter = jnp.ones((), jnp.float32)
+            if ps_on:
+                act_x = (xp.active_mask(rnd, G) if xp is not None
+                         else jnp.ones((G,), jnp.float32))
+                _, pod_live = elect_leaders(act_x, n_pods)
+                act_pod = jnp.repeat(pod_live, s)
+                incs, msks = [], []
+                for di, dp in enumerate(offs_p):
+                    bern = (xp.edge_mask(rnd, 0, di, n_pods)
+                            if xp is not None
+                            else jnp.ones((n_pods,), jnp.float32))
+                    src = jnp.roll(act_pod, dp * s)
+                    incs.append(src)
+                    msks.append(jnp.repeat(bern, s) * src * act_pod)
+                incsB, masksB = jnp.stack(incs), jnp.stack(msks)
+                mass = comm_state["mass"]
+                blw = comm_state["backlog_w"]
+                if xp is not None:
+                    part_inter = jnp.mean(masksB)
+            elif not inter_ps:                 # inter "server"
+                act_x = (xp.active_mask(rnd, G) if xp is not None
+                         else jnp.ones((G,), jnp.float32))
+                lead_w, plive = elect_leaders(act_i * act_x, n_pods)
+                n_live = jnp.maximum(jnp.sum(plive), 1.0)
+                if ip is not None or xp is not None:
+                    part_inter = jnp.mean(plive)
+            mass_spec = gspec if ps_on else dummy_spec
+            blw_spec = P(None, gentry) if ps_on else dummy_spec
+            pvec_spec = gspec if ps_on else dummy_spec
+            pmat_spec = P(None, gentry) if ps_on else dummy_spec
+            lead_spec = gspec if not inter_ps else dummy_spec
+            # inter-server chunked codecs: noise outside at the full
+            # rows shape, each device consumes its slice (like the flat
+            # int8 path — bit-identical scales and rounding bits)
+            lossy_x = {k: (not inter_ps) and not icodecs[k].identity
+                       for k in names}
+            chunked_x = {k: lossy_x[k] and icodecs[k].chunk > 0
+                         for k in names}
+            us, us_specs = [], []
+            for k in names:
+                if not chunked_x[k]:
+                    us.append(dummy)
+                    us_specs.append(dummy_spec)
+                    continue
+                chunk = icodecs[k].chunk
+                cnt = comm_state["codec"]["inter:" + k]["count"]
+                rows_shape = (G * layout.padded // chunk, chunk)
+                us.append(icodecs[k].noise(cnt, rows_shape)
+                          .reshape(G, -1, chunk))
+                us_specs.append(P(gax, sax, None))
+                cstates["inter:" + k] = {"count": cnt + 1}
+                touched = True
+            bl_spec = P(None, gentry, sax)
+            bls, bl_specs = [], []
+            for k in names:
+                if ps_on:
+                    bls.append(comm_state["backlog"][k])
+                    bl_specs.append(bl_spec)
+                else:
+                    bls.append(dummy)
+                    bl_specs.append(dummy_spec)
+
+            def local(xs_t, x0s_t, us_t, bl_t, act_l, mA_l, dA_l, den_l,
+                      w_l, blw_l, actp_l, incs_l, msks_l, lw_l, nlive_l):
+                # ---- stage A: pod-internal tier ----------------------
+                ys = []
+                for i, k in enumerate(names):
+                    codec = codecs[k]
+                    v = xs_t[i].astype(jnp.float32)
+                    if s > 1 and exch.intra_topology == "ring":
+                        for h in range(hops):
+                            out = w_self * v
+                            for di, d in enumerate(offs_pod):
+                                recv = jax.lax.ppermute(v, gax,
+                                                        perm_pod(d))
+                                t = recv if codec.identity \
+                                    else codec.compress(recv, {})[0]
+                                m = mA_l[h, di][:, None]
+                                out = out + w_edge * (m * t
+                                                      + (1.0 - m) * v)
+                            v = jnp.where(act_l[:, None] > 0, out, v)
+                    elif s > 1:                # intra "server"
+                        t0 = v if codec.identity \
+                            else codec.compress(v, {})[0]
+                        num = dA_l[0][:, None] * t0
+                        for d in range(1, s):
+                            recv = jax.lax.ppermute(v, gax, perm_pod(d))
+                            t = recv if codec.identity \
+                                else codec.compress(recv, {})[0]
+                            num = num + dA_l[d][:, None] * t
+                        m = num / jnp.maximum(den_l[:, None], 1.0)
+                        ok = jnp.logical_and(act_l[:, None] > 0,
+                                             den_l[:, None] > 0)
+                        v = jnp.where(ok, m, v)
+                    ys.append(v)
+                # ---- stage B: cross-pod tier -------------------------
+                if ps_on:
+                    new_w = jnp.where(actp_l > 0, a_sh * w_l, w_l)
+                    nblw = []
+                    for di, dp in enumerate(offs_p):
+                        recv = jax.lax.ppermute(a_sh * w_l, gax,
+                                                perm_pods(dp))
+                        b = blw_l[di] + incs_l[di] * recv
+                        m = msks_l[di]
+                        new_w = new_w + m * b
+                        nblw.append(b - m * b)
+                    outs, new_bls = [], []
+                    for i, k in enumerate(names):
+                        ic = icodecs[k]
+                        x = ys[i] * w_l[:, None]
+                        y = jnp.where(actp_l[:, None] > 0, a_sh * x, x)
+                        nb = []
+                        for di, dp in enumerate(offs_p):
+                            recv = jax.lax.ppermute(a_sh * x, gax,
+                                                    perm_pods(dp))
+                            b = bl_t[i][di] + incs_l[di][:, None] * recv
+                            t = b if ic.identity \
+                                else ic.compress(b, {})[0]
+                            m = msks_l[di][:, None]
+                            y = y + m * t
+                            nb.append(b - m * t)
+                        outs.append((y / new_w[:, None])
+                                    .astype(xs_t[i].dtype))
+                        new_bls.append(jnp.stack(nb))
+                    return (tuple(outs), tuple(new_bls), new_w,
+                            jnp.stack(nblw))
+                if inter_ps:                   # single pod: no DCN wire
+                    outs = tuple(ys[i].astype(xs_t[i].dtype)
+                                 for i in range(len(names)))
+                    return (outs, tuple(dummy for _ in names), dummy,
+                            dummy)
+                outs = []                      # inter "server"
+                for i, k in enumerate(names):
+                    ic = icodecs[k]
+                    y = ys[i]
+                    if lossy_x[k]:
+                        # cross-tier codec codes the round DELTA vs the
+                        # round-start reference (the int8 cell)
+                        x0f = x0s_t[i].astype(jnp.float32)
+                        d = y - x0f
+                        if chunked_x[k]:
+                            rows = d.reshape(-1, ic.chunk)
+                            out = ic.compress_rows(
+                                rows, us_t[i].reshape(rows.shape))
+                            y = x0f + out.reshape(d.shape)
+                        else:
+                            y = x0f + ic.compress(d, {})[0]
+                    m = jax.lax.psum(lw_l[:, None] * y, gax) / nlive_l
+                    y = jnp.where(act_l[:, None] > 0, m, y)
+                    outs.append(y.astype(xs_t[i].dtype))
+                return (tuple(outs), tuple(dummy for _ in names), dummy,
+                        dummy)
+
+            x0s = tuple(xs0.get(k, xs[k]) for k in names)  # dummy when
+            # the stream's inter codec is not lossy (never read inside)
+            f = shard_map(local, mesh=self.mesh,
+                          in_specs=((spec,) * len(names),
+                                    (spec,) * len(names),
+                                    tuple(us_specs), tuple(bl_specs),
+                                    gspec, masksA_spec, delivA_spec,
+                                    denA_spec, mass_spec, blw_spec,
+                                    pvec_spec, pmat_spec, pmat_spec,
+                                    lead_spec, P()),
+                          out_specs=((spec,) * len(names),
+                                     tuple(bl_specs), mass_spec,
+                                     blw_spec),
+                          check_rep=False)
+            mixed_t, new_bl, new_mass, new_blw = f(
+                tuple(xs[k] for k in names), x0s, tuple(us), tuple(bls),
+                act_i, masksA, delivA, denA, mass, blw, act_pod, incsB,
+                masksB, lead_w, n_live)
+            mixed = dict(zip(names, mixed_t))
+            if ps_on:
+                backlog = dict(comm_state["backlog"])
+                backlog.update(dict(zip(names, new_bl)))
+                new_state["mass"] = new_mass
+                new_state["backlog"] = backlog
+                new_state["backlog_w"] = new_blw
+            if touched:
+                new_state["codec"] = cstates
+            n_is = exch._intra_send_count()
+            n_xs = exch._inter_send_count()
+            tot = n_is + n_xs
+            new_state["round"] = rnd + 1
+            new_state["participation"] = (
+                (part_intra * n_is + part_inter * n_xs) / tot if tot > 0
+                else jnp.ones((), jnp.float32))
+            new_state["participation_intra"] = part_intra
+            new_state["participation_inter"] = part_inter
+            return mixed, new_state
 
         return fn
 

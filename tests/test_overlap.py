@@ -446,6 +446,84 @@ def test_onlinet_convergence_relief_ramps_t():
     assert c.history[-1]["relief"] == pytest.approx(c.relief_max)
 
 
+def test_onlinet_divergence_guard_clamps_at_stability_edge():
+    """The lr·T guard (DESIGN.md §14): consensus mass that GROWS between
+    exchanges at a measured per-step exponent â, against mixing that
+    only retires 1-γ̂ of it, is stable only for T < ln(1/γ̂)/â. The
+    guarded controller clamps there; a clamp-disabled twin fed the
+    SAME telemetry keeps T high (the multiplicative (1-γ̂) factor slows
+    growth but does not bound T)."""
+    guarded = controller.OnlineT(r=0.001, _t=10.0)
+    loose = controller.OnlineT(r=0.001, _t=10.0, guard_margin=1e9)
+    for ctl in (guarded, loose):
+        c_post, t = 1.0, 10
+        for _ in range(10):
+            c_pre = c_post * np.exp(0.4 * t)     # drift: a = 0.4 / step
+            c_post = 0.6 * c_pre                 # weak mixing: γ = 0.6
+            t = ctl.update(TRAJ, t_used=t, consensus_pre=c_pre,
+                           consensus_post=c_post)
+    h = guarded.history[-1]
+    assert h["a"] == pytest.approx(0.4, rel=0.1)
+    assert h["t_guard"] is not None
+    # analytic edge: 0.5 * ln(1/0.6) / 0.4 ~ 0.64 -> clamps to t_min
+    assert guarded.t == guarded.t_min
+    # same telemetry, clamp disabled: the (1-γ̂) factor leaves T at
+    # ~0.4 * t_cost, well ABOVE the stability edge
+    assert loose.t >= 3 * guarded.t
+    assert loose.history[-1]["t_guard"] is not None  # computed, unbinding
+
+
+def test_onlinet_guard_bounds_the_measured_divergent_config(key):
+    """THE §14 caveat, lifted from docs-only to a controller guarantee:
+    on the fully-determined quadratic (r=24, d=32) at lr 0.3,
+    overlapped decentralized ring at static T=6 DIVERGES (consensus
+    mass compounds round over round — the measured caveat), while the
+    SAME config with the online controller's divergence guard driving T
+    stays bounded and converges."""
+    params, batch = make_problem(key, r=24, d=32)
+    layout = packing.layout_of(params)
+    opt = optim.packed("sgd", 0.3, impl="jnp")
+    ex = comm.get_exchange("ring", "fp32", G, overlap=True, impl="jnp")
+    rounds_cache = {}
+
+    def round_for(t):
+        if t not in rounds_cache:
+            cfg = lsgd.LocalSGDConfig(n_groups=G, inner_steps=t,
+                                      metrics="traj")
+            rounds_cache[t] = jax.jit(lsgd.make_local_round(
+                quad_loss, opt, cfg, layout=layout, exchange=ex))
+        return rounds_cache[t]
+
+    def drive(ctl, rounds=30):
+        st = lsgd.init_state(params, opt, n_groups=G, layout=layout,
+                             exchange=ex)
+        t_cur, cons = 6, []
+        for _ in range(rounds):
+            st, m = round_for(t_cur)(st, batch)
+            pre = float(jnp.mean(m["consensus_sq"]))
+            cons.append(pre)
+            if not np.isfinite(pre) or pre > 1e6:
+                break
+            if ctl is not None:
+                t_cur = ctl.update(
+                    np.asarray(m["grad_sq_traj"])[0],
+                    t_used=int(jnp.max(m["inner_steps"])),
+                    consensus_pre=pre,
+                    consensus_post=float(
+                        jnp.mean(m["consensus_sq_post"])))
+        return cons
+
+    static = drive(None)                 # the documented caveat: T fixed
+    ctl = controller.OnlineT(r=1.0, _t=6.0)
+    guarded = drive(ctl)
+    assert static[-1] > 5 * static[0], static[-1]      # compounding
+    assert guarded[-1] < 0.1, guarded[-1]              # converged
+    assert static[-1] > 100 * guarded[-1]
+    assert max(guarded) < 100 * guarded[0]
+    # the guard actually engaged (not just the γ̂ scaling)
+    assert any(h["t_guard"] is not None for h in ctl.history)
+
+
 def test_onlinet_degrades_gracefully():
     """No telemetry at all reduces OnlineT to AdaptiveT with the prior
     r: same fitted T* core, no crash, T stays in [t_min, t_max]."""

@@ -235,6 +235,49 @@ def test_backpressure_defers_then_completes():
         starved.step()
 
 
+def test_sustained_overload_counts_deferrals(tmp_path):
+    """Backpressure telemetry (DESIGN.md §15): under a pool sized for one
+    request and a deep queue, every blocked admission is counted — the
+    kind="step" records carry deferred/deferred_total/free_rows, the
+    report surfaces them, and the engine still drains to completion."""
+    cfg = get_config("qwen3-32b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    probe = sdecode.geom_for(model, n_slots=2, page_size=4, max_len=16)
+    tight = 1 + probe.rows_per_slot     # pool fits exactly ONE request
+    path = tmp_path / "overload.jsonl"
+    trace = Trace(str(path), meta={"launcher": "serve", "arch": cfg.name})
+    eng = Engine(model, params, EngineConfig(
+        n_slots=2, page_size=4, max_prompt=8, max_new=8, n_pages=tight),
+        trace=trace)
+    reqs = _requests(cfg, n=6, prompt=(2, 8), gen=(3, 6))
+    done = eng.run([Request(r.rid, r.prompt.copy(), r.max_new)
+                    for r in reqs])
+    trace.close()
+    # sustained overload: with 2 slots and a 1-request pool, the second
+    # slot's admissions must have been deferred repeatedly
+    assert eng.deferred_total > 0
+    assert {c.rid for c in done} == {r.rid for r in reqs}  # nothing lost
+    meta, records = report.load(path)
+    assert report.check(meta, records) == []
+    steps = report.steps_of(records)
+    assert all({"deferred", "deferred_total", "free_rows"}
+               <= set(s["metrics"]) for s in steps)
+    # the cumulative counter is monotone and matches the engine's
+    totals = [s["metrics"]["deferred_total"] for s in steps]
+    assert totals == sorted(totals)
+    assert totals[-1] == eng.deferred_total == sum(
+        s["metrics"]["deferred"] for s in steps)
+    # the pool was actually exhausted at some point, and recovered
+    frees = [s["metrics"]["free_rows"] for s in steps]
+    assert min(frees) < probe.rows_per_slot
+    assert frees[-1] == eng.free.available()
+    s = report.summarize(meta, records)
+    assert s["serve"]["deferred_total"] == eng.deferred_total
+    assert s["serve"]["free_rows_min"] == min(frees)
+    assert s["serve"]["queued_max"] >= 1
+
+
 def test_serve_trace_schema(tmp_path):
     """kind="step" records pass the obs.report --check gate."""
     cfg = get_config("xlstm-1.3b").reduced()
